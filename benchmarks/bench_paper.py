@@ -1,0 +1,179 @@
+"""Paper-table benchmarks (Figs. 6-10 + §8.3), CPU-scale.
+
+One function per paper figure; each returns CSV rows.  All wall-clock
+comparisons are honest same-machine runs; the parallel-vs-sequential
+comparisons measure the BATCHED (data-parallel formulation) implementations
+against the sequential NH oracle, mirroring the paper's ANH-* vs NH setup.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (build_problem, exact_coreness, approx_coreness,
+                        build_hierarchy_levels, build_hierarchy_basic,
+                        build_hierarchy_interleaved, nh_full, nh_coreness,
+                        cut_hierarchy, nuclei_without_hierarchy,
+                        edge_density, nucleus_vertex_sets)
+from .common import suite, timed, row
+
+RS_GRID = [(1, 2), (2, 3), (1, 3), (2, 4), (3, 4)]
+
+
+def fig6_variants(quick=False) -> list[str]:
+    """ANH-TE vs ANH-EL vs ANH-BL across (r, s)."""
+    rows = []
+    graphs = suite(["ba2k", "planted1k"] if quick else
+                   ["ba2k", "er2k", "planted1k"])
+    rs = [(1, 2), (2, 3)] if quick else RS_GRID
+    for gname, g in graphs.items():
+        for (r, s) in rs:
+            problem = build_problem(g, r, s)
+            if problem.n_r == 0:
+                continue
+            core = exact_coreness(problem).core
+
+            _, t_te = timed(lambda: build_hierarchy_levels(problem, core))
+            _, t_bl = timed(lambda: build_hierarchy_basic(problem, core))
+            res, t_el = timed(lambda: build_hierarchy_interleaved(problem))
+            links = res.state.stats_links
+            rows.append(row(f"fig6/{gname}/r{r}s{s}/anh-te", t_te,
+                            f"n_r={problem.n_r}"))
+            rows.append(row(f"fig6/{gname}/r{r}s{s}/anh-el", t_el,
+                            f"links={links}"))
+            rows.append(row(f"fig6/{gname}/r{r}s{s}/anh-bl", t_bl, ""))
+    return rows
+
+
+def fig7_grid(quick=False) -> list[str]:
+    """Best hierarchy times across the (r, s) grid."""
+    rows = []
+    graphs = suite(["planted1k"] if quick else ["ba2k", "planted1k"])
+    rs = [(1, 2), (2, 3)] if quick else RS_GRID + [(1, 4), (2, 5), (4, 5)]
+    for gname, g in graphs.items():
+        for (r, s) in rs:
+            try:
+                problem = build_problem(g, r, s)
+            except Exception:
+                continue
+            if problem.n_r == 0:
+                continue
+            core = exact_coreness(problem).core
+            _, t_te = timed(lambda: build_hierarchy_levels(problem, core))
+            res, t_el = timed(lambda: build_hierarchy_interleaved(problem))
+            best = min(t_te, t_el)
+            which = "te" if t_te <= t_el else "el"
+            rows.append(row(f"fig7/{gname}/r{r}s{s}", best,
+                            f"best={which};n_s={problem.n_s}"))
+    return rows
+
+
+def fig8_scaling(quick=False) -> list[str]:
+    """Scalability.  This container has ONE core, so the paper's
+    thread-scaling axis is replaced by (a) problem-size scaling of the
+    batched algorithm and (b) the measured peel-round count (the span term
+    that sets parallel time on a real machine)."""
+    from repro.graph import generators
+    rows = []
+    sizes = [500, 1_000] if quick else [500, 1_000, 2_000, 4_000]
+    for n in sizes:
+        g = generators.barabasi_albert(n, 8, seed=7)
+        problem = build_problem(g, 2, 3)
+        res, t = timed(lambda: exact_coreness(problem))
+        rows.append(row(f"fig8/ba{n}/exact", t,
+                        f"rounds={res.rounds};m={g.m}"))
+        res_a, t_a = timed(lambda: approx_coreness(problem, delta=0.1))
+        rows.append(row(f"fig8/ba{n}/approx", t_a,
+                        f"rounds={res_a.rounds}"))
+    return rows
+
+
+def fig9_baselines(quick=False) -> list[str]:
+    """Interleaved parallel formulation vs sequential NH (end-to-end)."""
+    rows = []
+    graphs = suite(["planted1k"] if quick else ["ba2k", "planted1k"])
+    for gname, g in graphs.items():
+        for (r, s) in [(1, 2), (2, 3)] + ([] if quick else [(3, 4)]):
+            problem = build_problem(g, r, s)
+            if problem.n_r == 0:
+                continue
+            _, t_par = timed(lambda: build_hierarchy_interleaved(problem))
+            _, t_nh = timed(lambda: nh_full(problem))
+            rows.append(row(f"fig9/{gname}/r{r}s{s}/ours", t_par,
+                            f"vs_nh={t_nh / max(t_par, 1e-9):.2f}x"))
+            rows.append(row(f"fig9/{gname}/r{r}s{s}/nh", t_nh, ""))
+    return rows
+
+
+def fig10_nuclei(quick=False) -> list[str]:
+    """Hierarchy usefulness: cut vs re-run connectivity, plus densities."""
+    rows = []
+    graphs = suite(["planted1k"])
+    for gname, g in graphs.items():
+        for (r, s) in [(2, 3)] + ([] if quick else [(2, 4)]):
+            problem = build_problem(g, r, s)
+            core = exact_coreness(problem).core
+            tree = build_hierarchy_levels(problem, core)
+            kmax = int(np.asarray(core).max())
+            cs = sorted(set([1, max(1, kmax // 2), kmax]))
+
+            def with_tree():
+                return [cut_hierarchy(tree, c) for c in cs]
+
+            def without():
+                return [nuclei_without_hierarchy(problem, core, c)
+                        for c in cs]
+
+            labels, t_with = timed(with_tree)
+            _, t_without = timed(without)
+            dens = []
+            for lab, c in zip(labels, cs):
+                vs = nucleus_vertex_sets(problem, lab)
+                if vs:
+                    biggest = max(vs.values(), key=len)
+                    dens.append(edge_density(np.asarray(problem.g.edges),
+                                             biggest))
+            rows.append(row(f"fig10/{gname}/r{r}s{s}/with_hierarchy", t_with,
+                            f"speedup={t_without / max(t_with, 1e-9):.1f}x"))
+            rows.append(row(f"fig10/{gname}/r{r}s{s}/without", t_without,
+                            f"densities={'|'.join(f'{d:.2f}' for d in dens)}"))
+    return rows
+
+
+def approx_quality(quick=False) -> list[str]:
+    """§8.3: approximation speed + multiplicative error statistics."""
+    rows = []
+    graphs = suite(["ba2k", "planted1k"] if quick
+                   else ["ba2k", "er2k", "planted1k"])
+    for gname, g in graphs.items():
+        for (r, s) in [(2, 3)] + ([] if quick else [(1, 2), (2, 4)]):
+            problem = build_problem(g, r, s)
+            if problem.n_r == 0:
+                continue
+            exact_res, t_e = timed(lambda: exact_coreness(problem))
+            for delta in ([0.1] if quick else [0.1, 0.5, 1.0]):
+                approx_res, t_a = timed(
+                    lambda: approx_coreness(problem, delta=delta))
+                e = np.asarray(exact_res.core).astype(np.float64)
+                a = np.asarray(approx_res.core).astype(np.float64)
+                sel = e > 0
+                if not sel.any():
+                    continue
+                ratio = a[sel] / e[sel]
+                rows.append(row(
+                    f"approx/{gname}/r{r}s{s}/d{delta}", t_a,
+                    f"speedup={t_e / max(t_a, 1e-9):.2f}x;"
+                    f"err_mean={ratio.mean():.2f};"
+                    f"err_med={np.median(ratio):.2f};"
+                    f"err_max={ratio.max():.2f};"
+                    f"rounds={approx_res.rounds}vs{exact_res.rounds}"))
+    return rows
+
+
+ALL = {
+    "fig6": fig6_variants,
+    "fig7": fig7_grid,
+    "fig8": fig8_scaling,
+    "fig9": fig9_baselines,
+    "fig10": fig10_nuclei,
+    "approx": approx_quality,
+}

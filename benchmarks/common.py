@@ -1,0 +1,49 @@
+"""Benchmark plumbing: timed runs + the standard graph suite.
+
+The paper's SNAP graphs are offline; the suite substitutes synthetic graphs
+with matched *structure* (power-law BA for social-like graphs, planted
+cliques for nucleus-rich structure, ER for background) at CPU-tractable
+scale.  Every benchmark prints `name,us_per_call,derived` CSV rows.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.graph import generators, Graph
+
+_SUITE: Dict[str, Callable[[], Graph]] = {
+    "ba2k": lambda: generators.barabasi_albert(2_000, 8, seed=1),
+    "er2k": lambda: generators.erdos_renyi_sparse(2_000, 16_000, seed=2),
+    "planted1k": lambda: generators.planted_cliques(
+        1_000, [24, 18, 14, 10], 0.01, seed=3),
+    "ba5k": lambda: generators.barabasi_albert(5_000, 6, seed=4),
+}
+
+_CACHE: Dict[str, Graph] = {}
+
+
+def suite(names=None) -> Dict[str, Graph]:
+    names = names or list(_SUITE)
+    for n in names:
+        if n not in _CACHE:
+            _CACHE[n] = _SUITE[n]()
+    return {n: _CACHE[n] for n in names}
+
+
+def timed(fn: Callable, repeats: int = 1, warmup: int = 0):
+    for _ in range(warmup):
+        fn()
+    ts = []
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        ts.append(time.perf_counter() - t0)
+    return out, min(ts)
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.0f},{derived}"

@@ -1,0 +1,216 @@
+"""Perf hillclimbing driver: lower a cell with an optimization variant
+(tagged), then print the before/after roofline terms.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell minicpm --iter 1
+
+Each iteration is a (hypothesis, change) pair registered below; results land
+as tagged artifacts next to the baselines and are summarized for
+EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _specs_lm_context_parallel(mesh_axes=("data", "model")):
+    from jax.sharding import PartitionSpec as P
+    dp = ("data",)
+    return (
+        # context-parallel attention: shard SEQUENCE over "model" for the
+        # attention tensors (heads may not divide the axis; sequence always
+        # does), keep kv gathered; residual stream shards d over "model".
+        ("act_q", P(dp, "model", None, None)),
+        ("act_kv", P(dp, None, None, None)),
+        ("act_resid", P(dp, None, "model")),
+    )
+
+
+def _specs_resid_only():
+    from jax.sharding import PartitionSpec as P
+    return (("act_resid", P(("data",), None, "model")),)
+
+
+def _specs_moe_dispatch():
+    from jax.sharding import PartitionSpec as P
+    return (("act_moe_disp", P("model", "data", None)),
+            ("act_resid", P(("data",), None, "model")))
+
+
+def _specs_moe_ep_data():
+    from jax.sharding import PartitionSpec as P
+    return (("act_moe_disp", P("data", None, "model")),
+            ("act_resid", P(("data",), None, "model")))
+
+
+def _specs_moe_ep_data_cp():
+    from jax.sharding import PartitionSpec as P
+    dp = ("data",)
+    return (("act_moe_disp", P("data", None, "model")),
+            ("act_resid", P(dp, None, "model")),
+            ("act_q", P(dp, "model", None, None)),
+            ("act_kv", P(dp, None, None, None)))
+
+
+def _specs_moe_dispatch_cp():
+    from jax.sharding import PartitionSpec as P
+    dp = ("data",)
+    return (("act_moe_disp", P("model", "data", None)),
+            ("act_resid", P(dp, None, "model")),
+            ("act_q", P(dp, "model", None, None)),
+            ("act_kv", P(dp, None, None, None)))
+
+
+EXPERIMENTS = {
+    # cell key: (arch, shape, iteration -> (tag, overrides, hypothesis))
+    "minicpm": ("minicpm-2b", "train_4k", {
+        1: ("cp-attn",
+            lambda: {"act_specs": _specs_lm_context_parallel()},
+            "attention activations replicate across 'model' (36 heads % 16 "
+            "!= 0 blocks head sharding; GSPMD gives up) -> shard the "
+            "SEQUENCE dim of q/attn-out over 'model' (context parallelism) "
+            "and the residual stream's d over 'model'. Predict: compute "
+            "term ~4x down (attn no longer replicated), memory term 5-10x "
+            "down (the (B,Sq,H,chunk) softmax intermediates shard 16x), "
+            "collective term up mildly (kv all-gathers)."),
+        2: ("cp-attn-bf16",
+            lambda: {"act_specs": _specs_lm_context_parallel(),
+                     "attn_chunk": 2048},
+            "larger attention chunk (1024->2048) halves the number of "
+            "mask/stat passes per token; predict memory term down ~15%, "
+            "compute flat."),
+        4: ("fused-softmax",
+            lambda: {"act_specs": _specs_lm_context_parallel()},
+            "the memory term is dominated by elementwise passes over the "
+            "(B,Sq,H,chunk) score tensor (~8 full passes/chunk in the "
+            "online softmax: 2 wheres + isfinite guards + f32 PV). "
+            "Restructure: additive (B,Sq,chunk) mask bias, finite -1e30 "
+            "sentinel (no guards), bf16 probabilities into the PV matmul "
+            "(code change in transformer.online_attention, applies to all "
+            "LM archs). Predict: memory term ~25-35% down, compute flat."),
+        5: ("bf16-dot",
+            lambda: {"act_specs": _specs_lm_context_parallel()},
+            "per-op byte profile of iter 4: 'convert' (608 GB / 2 layers) "
+            "and copy/transpose (~400 GB) dominate — the per-chunk "
+            "bf16->f32 operand upcasts and the attention moveaxis churn. "
+            "Rewrite online_attention: bf16 x bf16 dot_general with f32 "
+            "accumulation (MXU-native), single in/out transposes, scale "
+            "folded into the bias add. Predict: memory term 30-40% down, "
+            "compute flat."),
+        3: ("resid-only",
+            lambda: {"act_specs": _specs_resid_only()},
+            "ablation: residual-stream sharding alone (no context "
+            "parallelism) — isolates how much of iter-1's win came from "
+            "the resid constraint vs the attention sharding."),
+    }),
+    "moonshot": ("moonshot-v1-16b-a3b", "train_4k", {
+        1: ("moe-disp",
+            lambda: {"act_specs": _specs_moe_dispatch()},
+            "the (E, cap, d) MoE dispatch buffers carry no sharding "
+            "constraint -> GSPMD replicates expert matmuls across the "
+            "'data' axis (16x waste on the FFN ~ the dominant flops). "
+            "Constrain dispatch P(model, data, None) so E shards over "
+            "'model' (EP) and capacity over 'data'. Predict: compute term "
+            "~10x down, memory term ~5x down, collective term down "
+            "(smaller gathered buffers)."),
+        2: ("moe-disp-cp",
+            lambda: {"act_specs": _specs_moe_dispatch_cp()},
+            "stack context-parallel attention (iter minicpm/1) on top of "
+            "the dispatch fix; predict further memory reduction from "
+            "sharded softmax intermediates."),
+        3: ("ep-data",
+            lambda: {"act_specs": _specs_moe_ep_data(),
+                     "moe_ep_data": True},
+            "iter 1 removed the replicated expert compute but GSPMD "
+            "lowered the cross-axis dispatch as ~6 TB of all-gathers "
+            "(experts over 'model' vs tokens over 'data' forces every "
+            "token row across the mesh). Re-layout: experts over 'data' "
+            "(the token axis — dispatch becomes an intra-axis all-to-all "
+            "pattern) and TP WITHIN each expert over 'model'. Predict: "
+            "all-gather bytes ~10x down, collective term < memory term."),
+        4: ("ep-data-cp",
+            lambda: {"act_specs": _specs_moe_ep_data_cp(),
+                     "moe_ep_data": True},
+            "stack context-parallel attention on the ep-data layout; "
+            "predict memory term down (attention intermediates shard) "
+            "with collectives flat."),
+    }),
+    "nucleus": ("nucleus", "orkut_23", {
+        1: ("ar16",
+            lambda: {"compress": True},
+            "the per-round (n_r,) int32 delta all-reduce dominates "
+            "(collective-bound cell). Send int16 with per-shard saturation "
+            "+ error feedback (remainder re-sent next round; exactness "
+            "proven by monotone peel levels). Predict: collective term "
+            "2x down, compute/memory unchanged."),
+    }),
+    "deepseek": ("deepseek-v2-lite-16b", "train_4k", {
+        1: ("ep-data",
+            lambda: {"act_specs": _specs_moe_ep_data(),
+                     "moe_ep_data": True},
+            "transfer moonshot/3's winning layout (EP over 'data', TP "
+            "inside experts over 'model', dispatch constrained) to the "
+            "MLA+MoE arch; predict compute ~3x down, memory ~2x down."),
+        2: ("ep-data-cp",
+            lambda: {"act_specs": _specs_moe_ep_data_cp(),
+                     "moe_ep_data": True},
+            "stack context-parallel attention (moonshot/4, minicpm/1); "
+            "MLA's q/k are (B,S,16,192) with shared-rope broadcast "
+            "intermediates — predict memory down another ~2x."),
+    }),
+}
+
+
+def show(arch, shape, tags):
+    from . import roofline
+    print(f"\n=== {arch} x {shape} ===")
+    base = roofline.analyze_artifact(os.path.join(
+        roofline.ARTIFACT_DIR, f"{arch}--{shape}--pod16x16.json"))
+    rows = [("baseline", base)]
+    for t in tags:
+        p = os.path.join(roofline.ARTIFACT_DIR,
+                         f"{arch}--{shape}--pod16x16-{t}.json")
+        if os.path.exists(p):
+            rows.append((t, roofline.analyze_artifact(p)))
+    print(f"{'variant':16s} {'dom':10s} {'compute_s':>10s} {'memory_s':>10s}"
+          f" {'collect_s':>10s} {'useful':>7s} {'roofline':>9s}")
+    for name, r in rows:
+        if r.get("status") != "ok":
+            print(f"{name:16s} ERROR {r.get('error')}")
+            continue
+        u = r.get("useful_compute_ratio")
+        f = r.get("roofline_fraction")
+        print(f"{name:16s} {r['dominant']:10s} {r['compute_s']:10.3f} "
+              f"{r['memory_s']:10.3f} {r['collective_s']:10.3f} "
+              f"{u or 0:7.3f} {f or 0:9.4f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(EXPERIMENTS))
+    ap.add_argument("--iter", type=int, default=0,
+                    help="0 = just show the comparison table")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    arch, shape, iters = EXPERIMENTS[args.cell]
+    if args.iter:
+        tag, overrides_fn, hypothesis = iters[args.iter]
+        print(f"HYPOTHESIS: {hypothesis}\n")
+        from repro.launch.dryrun import run_cell, artifact_path
+        path = artifact_path(arch, shape, False, tag)
+        if os.path.exists(path) and not args.force:
+            print(f"cached: {path}")
+        else:
+            res = run_cell(arch, shape, False,
+                           opt_overrides=overrides_fn(), tag=tag)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=2)
+            print(f"wrote {path}: {res.get('status')}"
+                  f" {res.get('error', '')}")
+    show(arch, shape, [t for t, _, _ in iters.values()])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Apply the winning §Perf recipe to every LM cell -> tagged '-opt' artifacts.
+
+Recipe (from the hillclimb log):
+  dense archs:  context-parallel attention + model-sharded residual
+  MoE archs:    + experts-over-data (EP on the token axis, TP inside experts)
+"""
+from __future__ import annotations
+
+import json
+import os
+
+
+def main() -> None:
+    from repro.launch.dryrun import run_cell, artifact_path
+    from jax.sharding import PartitionSpec as P
+    dp = ("data",)
+    cp = (("act_q", P(dp, "model", None, None)),
+          ("act_kv", P(dp, None, None, None)),
+          ("act_resid", P(dp, None, "model")))
+    moe = cp + (("act_moe_disp", P("data", None, "model")),)
+    # decode (Sq == 1): sequence sharding is meaningless — constrain only
+    # the residual stream; MoE keeps the EP-over-data layout
+    resid = (("act_resid", P(dp, None, "model")),)
+    moe_resid = resid + (("act_moe_disp", P("data", None, "model")),)
+    plans = {
+        "stablelm-12b": ({"act_specs": cp}, {"act_specs": resid}),
+        "minicpm-2b": ({"act_specs": cp}, {"act_specs": resid}),
+        "minitron-4b": ({"act_specs": cp}, {"act_specs": resid}),
+        "moonshot-v1-16b-a3b": ({"act_specs": moe, "moe_ep_data": True},
+                                {"act_specs": moe_resid,
+                                 "moe_ep_data": True}),
+        "deepseek-v2-lite-16b": ({"act_specs": moe, "moe_ep_data": True},
+                                 {"act_specs": moe_resid,
+                                  "moe_ep_data": True}),
+    }
+    for arch, (ov_main, ov_decode) in plans.items():
+        for shape in ("train_4k", "prefill_32k", "decode_32k"):
+            ov = ov_decode if shape == "decode_32k" else ov_main
+            path = artifact_path(arch, shape, False, "opt")
+            if os.path.exists(path):
+                print(f"cached {path}")
+                continue
+            print(f"== {arch} x {shape} (opt) ==", flush=True)
+            try:
+                res = run_cell(arch, shape, False, opt_overrides=ov,
+                               tag="opt")
+            except Exception as e:
+                res = {"arch": arch, "shape": shape, "mesh": "pod16x16",
+                       "status": "error", "error": repr(e)[:1500],
+                       "tag": "opt"}
+            with open(path, "w") as f:
+                json.dump(res, f, indent=2)
+            print(res.get("status"), res.get("error", ""), flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,202 @@
+"""Roofline analysis from dry-run artifacts (TPU v5e targets).
+
+Per (arch x shape x mesh) artifact:
+  compute term    = HLO_FLOPs / peak_FLOPs        [s]
+  memory term     = HLO_bytes / HBM_bw            [s]
+  collective term = collective_bytes / link_bw    [s]
+(cost_analysis numbers come from the per-device SPMD module, so terms are
+per-chip directly; the assignment's /chips normalization is equivalent.)
+
+Also reports MODEL_FLOPS (6·N·D dense / 6·N_active·D MoE, and analytic
+per-family estimates for GNN/recsys/nucleus) and the useful-compute ratio
+MODEL_FLOPS / (HLO_FLOPs * chips).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from math import comb
+from typing import Dict, Optional
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link (per chip, per direction)
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def _lm_model_flops(arch_id: str, kind: str, dims: Dict[str, int]) -> float:
+    from repro.configs import get_arch
+    spec = get_arch(arch_id)
+    cfg = spec.make_config()
+    n_active = cfg.active_param_count()
+    B, S = dims["global_batch"], dims["seq_len"]
+    if kind == "train":
+        return 6.0 * n_active * B * S
+    if kind == "prefill":
+        return 2.0 * n_active * B * S
+    # decode: one token per sequence + attention over the cache
+    attn_reads = 4.0 * cfg.n_layers * B * S * cfg.n_kv_heads * cfg.head_dim
+    return 2.0 * n_active * B + attn_reads
+
+
+def _gnn_model_flops(arch_id: str, dims: Dict[str, int]) -> float:
+    from repro.configs import get_arch
+    spec = get_arch(arch_id)
+    cfg = spec.make_config()
+    if "batch" in dims and "n_nodes" in dims and dims.get("batch"):
+        N = dims["n_nodes"] * dims["batch"]
+        E = dims["n_edges"] * dims["batch"]
+    else:
+        N, E = dims["n_nodes"], dims["n_edges"]
+    d_in = dims.get("d_feat", 16)
+    h = cfg.d_hidden
+    if arch_id == "gin-tu":
+        per_node = d_in * h + h * h + (cfg.n_layers - 1) * 2 * h * h
+        return 6.0 * (N * per_node + E * h)
+    if arch_id == "egnn":
+        per_edge = cfg.n_layers * (2 * h + 1 + h) * h     # phi_e ~ 2 layers
+        per_node = cfg.n_layers * 3 * h * h + d_in * h
+        return 6.0 * (E * per_edge + N * per_node)
+    if arch_id == "dimenet":
+        T = E * dims.get("triplet_cap", 8)
+        nb, nsbf = cfg.n_bilinear, cfg.n_spherical * cfg.n_radial
+        per_trip = nb * h * h + nsbf * nb + h * h
+        per_edge = cfg.n_blocks * 4 * h * h + (2 * h + cfg.n_radial) * h
+        return 6.0 * (T * per_trip * cfg.n_blocks + E * per_edge)
+    if arch_id == "mace":
+        C = cfg.d_hidden
+        paths = cfg.n_paths * 13            # scalar+vec+tensor component muls
+        per_edge = cfg.n_layers * (cfg.n_rbf * 64 + 64 * paths * C / 64 + paths * C)
+        per_node = cfg.n_layers * (20 * C + 6 * C * C)
+        return 6.0 * (E * per_edge + N * per_node)
+    raise ValueError(arch_id)
+
+
+def _recsys_model_flops(kind: str, dims: Dict[str, int]) -> float:
+    from repro.configs import get_arch
+    cfg = get_arch("din").make_config()
+    d = cfg.embed_dim
+    attn_p = 8 * d * cfg.attn_mlp[0] + cfg.attn_mlp[0] * cfg.attn_mlp[1] \
+        + cfg.attn_mlp[1]
+    mlp_p = 5 * d * cfg.mlp[0] + cfg.mlp[0] * cfg.mlp[1] + cfg.mlp[1]
+    per_req = cfg.seq_len * (attn_p + 2 * d) + mlp_p
+    B = dims.get("n_candidates") or dims.get("batch", 1)
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * B * per_req
+
+
+def _nucleus_model_flops(dims: Dict[str, int]) -> float:
+    # useful integer work: each incidence entry read+decremented once
+    return 2.0 * dims["n_s"] * dims["C"]
+
+
+def model_flops(arch_id: str, kind: str, shape_name: str) -> Optional[float]:
+    from repro.configs import get_arch
+    spec = get_arch(arch_id)
+    dims = spec.shape(shape_name).dims
+    if spec.family == "lm":
+        return _lm_model_flops(arch_id, kind, dims)
+    if spec.family == "gnn":
+        return _gnn_model_flops(arch_id, dims)
+    if spec.family == "recsys":
+        return _recsys_model_flops(kind, dims)
+    if spec.family == "core":
+        return _nucleus_model_flops(dims)
+    return None
+
+
+def analyze_artifact(path: str) -> Optional[Dict]:
+    with open(path) as f:
+        art = json.load(f)
+    if art.get("status") != "ok":
+        return {"arch": art.get("arch"), "shape": art.get("shape"),
+                "mesh": art.get("mesh"), "status": art.get("status"),
+                "skip_reason": art.get("skip_reason"),
+                "error": art.get("error"), "tag": art.get("tag", "")}
+    cost = art.get("cost_extrapolated") or art["cost"]
+    flops_dev = cost.get("flops") or 0.0
+    bytes_dev = cost.get("bytes accessed") or 0.0
+    coll_dev = art.get("collective_bytes_total_extrapolated",
+                       art["collective_bytes_total"])
+    chips = art["n_devices"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(art["arch"], art["kind"], art["shape"])
+    useful = (mf / (flops_dev * chips)) if (mf and flops_dev) else None
+    bound = max(terms.values())
+    # roofline fraction: useful model flops at peak vs the bound term
+    frac = None
+    if mf and bound > 0:
+        frac = (mf / chips / PEAK_FLOPS) / bound
+    return {
+        "arch": art["arch"], "shape": art["shape"], "mesh": art["mesh"],
+        "status": "ok", "kind": art["kind"], "tag": art.get("tag", ""),
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant, "bound_s": bound,
+        "model_flops": mf, "hlo_flops_per_dev": flops_dev,
+        "useful_compute_ratio": useful, "roofline_fraction": frac,
+        "collectives": art.get("collectives_extrapolated",
+                               art.get("collectives", {})),
+        "memory": art.get("memory", {}),
+        "extrapolated": "cost_extrapolated" in art,
+    }
+
+
+def full_table(tag: str = "", mesh: str = "pod16x16") -> list[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "*.json"))):
+        base = os.path.basename(path)
+        if mesh not in base:
+            continue
+        if tag and not base.endswith(f"{mesh}-{tag}.json"):
+            continue
+        if not tag and not base.endswith(f"{mesh}.json"):
+            continue
+        r = analyze_artifact(path)
+        if r:
+            rows.append(r)
+    return rows
+
+
+def format_table(rows: list[Dict]) -> str:
+    out = [f"{'arch':24s} {'shape':16s} {'dom':10s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'collect_s':>10s} {'useful':>7s} "
+           f"{'roofline':>8s}"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"{r['arch']:24s} {r['shape']:16s} "
+                       f"[{r['status']}: {str(r.get('skip_reason') or r.get('error'))[:60]}]")
+            continue
+        u = f"{r['useful_compute_ratio']:.3f}" if r["useful_compute_ratio"] else "-"
+        f = f"{r['roofline_fraction']:.3f}" if r["roofline_fraction"] else "-"
+        out.append(
+            f"{r['arch']:24s} {r['shape']:16s} {r['dominant']:10s} "
+            f"{r['compute_s']:10.4f} {r['memory_s']:10.4f} "
+            f"{r['collective_s']:10.4f} {u:>7s} {f:>8s}")
+    return "\n".join(out)
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    rows = full_table(tag=args.tag, mesh=args.mesh)
+    if args.json:
+        print(json.dumps(rows, indent=2))
+    else:
+        print(format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Benchmark driver: one bench per paper table/figure + the roofline table.
+
+`python -m benchmarks.run [--quick] [--only fig6,fig9]` prints
+`name,us_per_call,derived` CSV rows, then the roofline table if dry-run
+artifacts exist.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced graph suite / grid")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of benches")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    from . import bench_paper
+    only = set(filter(None, args.only.split(",")))
+    print("name,us_per_call,derived")
+    for name, fn in bench_paper.ALL.items():
+        if only and name not in only:
+            continue
+        try:
+            for r in fn(quick=args.quick):
+                print(r, flush=True)
+        except Exception as e:  # keep the suite running
+            print(f"{name}/ERROR,0,{e!r}", flush=True)
+
+    if not args.skip_roofline and not only:
+        from . import roofline
+        rows = roofline.full_table()
+        if rows:
+            print("\n# Roofline (single-pod 16x16, per chip):")
+            print(roofline.format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""End-to-end driver: nucleus decomposition CURATES the training graph for a
+GNN — the paper's technique composed with an assigned architecture.
+
+    PYTHONPATH=src python examples/graph_pipeline.py
+
+Pipeline:
+  1. build a noisy social-like graph with planted communities,
+  2. run (2,3) nucleus decomposition + hierarchy (the paper),
+  3. cut the hierarchy to keep only dense nuclei -> curated subgraph,
+  4. train GIN on both raw and curated graphs on a community-recovery task,
+  5. report the accuracy gain from nucleus curation.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from functools import partial
+
+from repro.graph import make_graph, generators
+from repro.core import (build_problem, exact_coreness,
+                        build_hierarchy_levels, cut_hierarchy,
+                        nucleus_vertex_sets)
+from repro.models import gin
+from repro.models.gnn_common import make_batch_from_arrays
+from repro.optim import adamw
+from repro.launch import steps as S
+
+
+def make_task(seed=0, n=240, k=4):
+    """k planted communities + heavy inter-community noise edges."""
+    rng = np.random.default_rng(seed)
+    per = n // k
+    edges = []
+    labels = np.zeros(n, np.int64)
+    for c in range(k):
+        mem = np.arange(c * per, (c + 1) * per)
+        labels[mem] = c
+        for _ in range(per * 6):
+            u, v = rng.choice(mem, 2, replace=False)
+            edges.append((u, v))
+    for _ in range(n * 4):                     # noise
+        u, v = rng.integers(0, n, 2)
+        edges.append((u, v))
+    return make_graph(n, np.asarray(edges)), labels
+
+
+def train_gin(g, labels, seed=0, steps=150):
+    n = g.n
+    rng = np.random.default_rng(seed)
+    feats = rng.standard_normal((n, 16)).astype(np.float32)
+    e = np.asarray(g.edges)
+    src = np.concatenate([e[:, 0], e[:, 1]]).astype(np.int32)
+    dst = np.concatenate([e[:, 1], e[:, 0]]).astype(np.int32)
+    cfg = gin.GINConfig(d_in=16, n_layers=3, d_hidden=32,
+                        n_classes=int(labels.max()) + 1, graph_level=False)
+    params = gin.init_params(jax.random.PRNGKey(seed), cfg)
+    opt = adamw.init_state(params)
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=steps,
+                                weight_decay=0.0)
+    train_mask = (rng.random(n) < 0.3).astype(np.float32)
+    batch = {"nodes": jnp.asarray(feats), "edge_src": jnp.asarray(src),
+             "edge_dst": jnp.asarray(dst),
+             "node_mask": jnp.ones((n,), bool),
+             "edge_mask": jnp.ones_like(jnp.asarray(src), bool),
+             "graph_id": jnp.arange(n, dtype=jnp.int32),
+             "labels": jnp.asarray(labels, jnp.int32),
+             "label_mask": jnp.asarray(train_mask)}
+    step = jax.jit(partial(S.gnn_train_step, cfg=cfg, arch="gin-tu",
+                           n_graphs=n, node_level=True, opt_cfg=opt_cfg))
+    for _ in range(steps):
+        params, opt, metrics = step(params, opt, batch)
+    # eval on held-out nodes
+    cfg_eval = gin.GINConfig(**{**cfg.__dict__, "graph_level": False})
+    gb = make_batch_from_arrays(feats, src, dst,
+                                graph_id=np.arange(n), n_graphs=n)
+    logits = gin.forward(params, gb, cfg_eval)
+    pred = np.asarray(jnp.argmax(logits, -1))
+    test = train_mask == 0
+    return float((pred[test] == labels[test]).mean())
+
+
+def main() -> None:
+    g, labels = make_task()
+    print(f"raw graph: n={g.n} m={g.m}")
+
+    # --- the paper: decompose, cut, curate ---------------------------------
+    problem = build_problem(g, 2, 3)
+    core = exact_coreness(problem).core
+    tree = build_hierarchy_levels(problem, core)
+    kmax = int(np.asarray(core).max())
+    cut_level = max(2, kmax // 3)
+    nuclei = nucleus_vertex_sets(problem, cut_hierarchy(tree, cut_level))
+    keep = np.zeros(g.n, bool)
+    for verts in nuclei.values():
+        keep[verts] = True
+    e = np.asarray(g.edges)
+    sel = keep[e[:, 0]] & keep[e[:, 1]]
+    g_cur = make_graph(g.n, e[sel])
+    print(f"curated:  kept {keep.sum()} / {g.n} vertices inside "
+          f"{len(nuclei)} nuclei at c={cut_level}; m={g_cur.m}")
+
+    acc_raw = train_gin(g, labels, seed=1)
+    acc_cur = train_gin(g_cur, labels, seed=1)
+    print(f"GIN community recovery:  raw graph acc={acc_raw:.3f}   "
+          f"nucleus-curated acc={acc_cur:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Quickstart: (r, s) nucleus decomposition + hierarchy in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py [--r 2 --s 3]
+
+Builds a graph with planted dense structure, computes exact coreness values,
+constructs the hierarchy (interleaved single-pass ANH-EL), and walks the tree
+to extract nuclei at every resolution — the paper's Figure 1 workflow.
+"""
+import argparse
+
+import numpy as np
+
+from repro.graph import generators
+from repro.core import (build_problem, exact_coreness,
+                        build_hierarchy_interleaved, cut_hierarchy,
+                        nucleus_vertex_sets, edge_density)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--r", type=int, default=2)
+    ap.add_argument("--s", type=int, default=3)
+    ap.add_argument("--n", type=int, default=300)
+    args = ap.parse_args()
+
+    g = generators.planted_cliques(args.n, [16, 12, 9, 7], 0.02, seed=1)
+    print(f"graph: n={g.n} m={g.m};  ({args.r},{args.s}) nucleus decomposition")
+
+    problem = build_problem(g, args.r, args.s)
+    print(f"r-cliques: {problem.n_r}, s-cliques: {problem.n_s}")
+
+    res = build_hierarchy_interleaved(problem)  # coreness + hierarchy, 1 pass
+    core = np.asarray(res.core)
+    print(f"coreness: max={core.max()}  "
+          f"mean={core.mean():.2f}  peel rounds={res.rounds}")
+
+    tree = res.tree
+    print(f"hierarchy: {tree.n_leaves} leaves, {tree.n_internal} internal "
+          f"nodes")
+    for c in sorted(set([1, int(core.max() // 2), int(core.max())])):
+        labels = cut_hierarchy(tree, c)
+        nuclei = nucleus_vertex_sets(problem, labels)
+        dens = sorted((edge_density(np.asarray(g.edges), v), len(v))
+                      for v in nuclei.values())[::-1][:3]
+        print(f"  c={c:3d}: {len(nuclei):4d} nuclei; densest: "
+              + ", ".join(f"density={d:.2f} |V|={k}" for d, k in dens))
+
+
+if __name__ == "__main__":
+    main()

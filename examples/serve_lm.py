@@ -1,0 +1,26 @@
+"""Batched LM serving with a KV cache (continuous-wave batching).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch deepseek-v2-lite-16b
+
+Uses the reduced config on CPU; the decode step is the same function the
+decode_32k dry-run lowers for the production meshes (MLA archs decode from
+the compressed-latent cache).
+"""
+import argparse
+
+from repro.launch.serve import serve_lm
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="deepseek-v2-lite-16b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--gen-len", type=int, default=16)
+    args = ap.parse_args()
+    outs = serve_lm(args.arch, n_requests=args.requests, batch_slots=4,
+                    prompt_len=8, gen_len=args.gen_len, smoke=True)
+    print(f"first request tokens: {outs[0][:10].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

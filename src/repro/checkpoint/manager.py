@@ -1,0 +1,135 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic.
+
+  * **Atomic**: state is written to `step_N.tmp/` then `os.rename`d to
+    `step_N/` — a crash mid-write can never corrupt the latest checkpoint.
+  * **Async**: the device->host transfer happens synchronously (cheap), the
+    disk write runs on a background thread so the train loop is not blocked;
+    `wait()` joins before the next save or at exit.
+  * **Elastic re-mesh restore**: checkpoints store LOGICAL arrays (+ the data
+    step for pipeline resume).  `restore(..., sharding_tree=)` re-shards onto
+    whatever mesh the new job has — a different device count than the writer
+    is fine, which is what elastic scaling after node failure requires.
+  * Retention: keeps the newest `keep` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, state: Any, extra: Optional[Dict] = None,
+             blocking: bool = False) -> None:
+        self.wait()
+        host_flat, _ = _flatten_with_paths(state)
+        host = {k: np.asarray(v) for k, v in host_flat.items()}
+        meta = {"step": int(step), "extra": extra or {}}
+
+        def write():
+            tmp = os.path.join(self.directory, f"step_{step}.tmp")
+            final = os.path.join(self.directory, f"step_{step}")
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            np.savez(os.path.join(tmp, "arrays.npz"), **host)
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)          # the atomic commit point
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_", 1)[1]))
+                except ValueError:
+                    pass
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return max(steps) if steps else None
+
+    def restore(self, like: Any, step: Optional[int] = None,
+                sharding_tree: Any = None):
+        """Restore into the structure of `like`; reshard if shardings given.
+
+        Returns (state, step, extra).  `sharding_tree` mirrors `like` with
+        jax.sharding.Sharding leaves (or None to keep host arrays) — this is
+        the elastic re-mesh path: the stored arrays are logical, so any mesh
+        shape works.
+        """
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        path = os.path.join(self.directory, f"step_{step}")
+        arrays = np.load(os.path.join(path, "arrays.npz"))
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        flat_like, treedef = _flatten_with_paths(like)
+        missing = set(flat_like) - set(arrays.files)
+        if missing:
+            raise KeyError(f"checkpoint missing keys: {sorted(missing)[:5]}")
+        leaves = []
+        flat_sh = (_flatten_with_paths(sharding_tree)[0]
+                   if sharding_tree is not None else {})
+        for key in flat_like:
+            arr = arrays[key]
+            want = flat_like[key]
+            if hasattr(want, "dtype") and arr.dtype != want.dtype:
+                arr = arr.astype(want.dtype)
+            sh = flat_sh.get(key)
+            leaves.append(jax.device_put(arr, sh) if sh is not None else arr)
+        # rebuild in treedef leaf order
+        paths_in_order = [
+            "/".join(str(p) for p in path)
+            for path, _ in jax.tree_util.tree_flatten_with_path(like)[0]]
+        by_key = dict(zip(flat_like.keys(), leaves))
+        state = jax.tree_util.tree_unflatten(
+            treedef, [by_key[k] for k in paths_in_order])
+        return state, meta["step"], meta["extra"]

@@ -1,0 +1,11 @@
+"""Architecture configs: one module per assigned arch (+ the paper's own).
+
+`get_arch(id)` returns the registered ArchSpec; importing this package
+registers all architectures.
+"""
+from .base import ArchSpec, ShapeCell, get_arch, all_archs, sds
+from . import (stablelm_12b, minicpm_2b, minitron_4b, moonshot_v1_16b_a3b,
+               deepseek_v2_lite_16b, gin_tu, egnn, dimenet, mace, din,
+               nucleus)
+
+ALL_ARCH_IDS = tuple(sorted(all_archs()))

@@ -1,0 +1,67 @@
+"""Arch registry plumbing: every config module registers an ArchSpec.
+
+An ArchSpec knows how to build (a) the FULL published config (dry-run /
+roofline only — never allocated on CPU), (b) a REDUCED smoke config (runs a
+real train/serve step on CPU), and (c) `input_specs(shape)` — the
+ShapeDtypeStruct stand-ins for each of the arch's assigned input shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+_REGISTRY: Dict[str, "ArchSpec"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One (arch x input-shape) dry-run cell."""
+
+    name: str
+    kind: str                     # train | prefill | decode | serve | retrieval
+    dims: Dict[str, int]
+    skip_reason: Optional[str] = None   # e.g. long_500k on full attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    family: str                   # "lm" | "gnn" | "recsys"
+    make_config: Callable[[], Any]
+    make_smoke_config: Callable[[], Any]
+    shapes: Tuple[ShapeCell, ...]
+    input_specs: Callable[[Any, ShapeCell], Dict[str, Any]]
+    notes: str = ""
+
+    def shape(self, name: str) -> ShapeCell:
+        for c in self.shapes:
+            if c.name == name:
+                return c
+        raise KeyError(f"{self.arch_id}: unknown shape {name}")
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    _REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in _REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[arch_id]
+
+
+def all_archs():
+    return dict(_REGISTRY)
+
+
+def sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def pad_vocab(v: int, multiple: int = 256) -> int:
+    """Pad vocab to a shardable multiple (noted per config)."""
+    return -(-v // multiple) * multiple

@@ -1,0 +1,64 @@
+"""din [recsys]: embed_dim=18 seq_len=100 attn_mlp=80-40 mlp=200-80
+interaction=target-attn [arXiv:1706.06978; paper].
+
+Embedding tables: 10^6 items / 10^4 categories / 10^5 user features,
+vocab-sharded over the "model" mesh axis (EmbeddingBag substrate in
+repro.models.din)."""
+import jax.numpy as jnp
+
+from ..models.din import DINConfig
+from .base import ArchSpec, register, ShapeCell, sds
+
+SHAPES = (
+    ShapeCell("train_batch", "train", {"batch": 65_536}),
+    ShapeCell("serve_p99", "serve", {"batch": 512}),
+    ShapeCell("serve_bulk", "serve", {"batch": 262_144}),
+    ShapeCell("retrieval_cand", "retrieval",
+              {"batch": 1, "n_candidates": 1_000_000}),
+)
+
+
+def make_config() -> DINConfig:
+    return DINConfig(name="din", embed_dim=18, seq_len=100,
+                     attn_mlp=(80, 40), mlp=(200, 80),
+                     n_items=1_000_000, n_cates=10_000, n_user_feats=100_000)
+
+
+def make_smoke_config() -> DINConfig:
+    return DINConfig(name="din-smoke", embed_dim=8, seq_len=12,
+                     attn_mlp=(16, 8), mlp=(24, 12),
+                     n_items=1_000, n_cates=50, n_user_feats=100)
+
+
+def input_specs(cfg: DINConfig, cell: ShapeCell):
+    B = cell.dims["batch"]
+    S = cfg.seq_len
+    if cell.kind == "retrieval":
+        # pad the candidate set to a 512-multiple so it shards evenly over
+        # both production meshes (1,000,000 -> 1,000,448; pad rows scored
+        # and dropped by the caller)
+        NC = -(-cell.dims["n_candidates"] // 512) * 512
+        return {"batch": {
+            "hist_items": sds((S,), jnp.int32),
+            "hist_cates": sds((S,), jnp.int32),
+            "user_id": sds((), jnp.int32),
+            "cand_items": sds((NC,), jnp.int32),
+            "cand_cates": sds((NC,), jnp.int32),
+        }}
+    batch = {
+        "hist_items": sds((B, S), jnp.int32),
+        "hist_cates": sds((B, S), jnp.int32),
+        "cand_item": sds((B,), jnp.int32),
+        "cand_cate": sds((B,), jnp.int32),
+        "user_id": sds((B,), jnp.int32),
+    }
+    if cell.kind == "train":
+        batch["label"] = sds((B,), jnp.float32)
+    return {"batch": batch}
+
+
+SPEC = register(ArchSpec(
+    arch_id="din", family="recsys",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    shapes=SHAPES, input_specs=input_specs,
+    notes="target-attention CTR; EmbeddingBag = take + segment_sum"))

@@ -1,0 +1,80 @@
+"""Shared shape grid + input specs for the GNN-family architectures.
+
+Shapes carry their own feature/label dims (taken from the public datasets the
+shapes correspond to: cora / reddit / ogbn-products / QM9-like molecules).
+Equivariant archs get synthetic 3-D positions on every shape (DESIGN.md §5);
+DimeNet additionally gets capacity-capped triplet lists (cap recorded here).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from .base import ShapeCell, sds
+
+# static sampler capacities for minibatch_lg (fanout 15-10 over 1024 seeds)
+_MB_NODES = 1024 * (1 + 15 + 150)      # 169,984
+_MB_EDGES = 1024 * (15 + 150)          # 168,960
+
+GNN_SHAPES = (
+    ShapeCell("full_graph_sm", "train",
+              {"n_nodes": 2_708, "n_edges": 10_556, "d_feat": 1_433,
+               "n_classes": 7, "triplet_cap": 8}),
+    ShapeCell("minibatch_lg", "train",
+              {"n_nodes": _MB_NODES, "n_edges": _MB_EDGES, "d_feat": 602,
+               "n_classes": 41, "triplet_cap": 8,
+               "base_nodes": 232_965, "base_edges": 114_615_892,
+               "batch_nodes": 1_024, "fanout": (15, 10)}),
+    ShapeCell("ogb_products", "train",
+              {"n_nodes": 2_449_029, "n_edges": 61_859_140, "d_feat": 100,
+               "n_classes": 47, "triplet_cap": 4}),
+    ShapeCell("molecule", "train",
+              {"n_nodes": 30, "n_edges": 64, "batch": 128, "d_feat": 16,
+               "triplet_cap": 8}),
+)
+
+
+def needs_pos(arch_id: str) -> bool:
+    return arch_id in ("egnn", "mace", "dimenet")
+
+
+def needs_triplets(arch_id: str) -> bool:
+    return arch_id == "dimenet"
+
+
+def gnn_input_specs(arch_id: str):
+    def specs(cfg: Any, cell: ShapeCell) -> Dict[str, Any]:
+        d = cell.dims
+        if cell.name == "molecule":
+            N = d["n_nodes"] * d["batch"]
+            E = d["n_edges"] * d["batch"]
+            n_graphs = d["batch"]
+            node_level = False
+        else:
+            N, E = d["n_nodes"], d["n_edges"]
+            n_graphs = N          # node-level: identity "pooling"
+            node_level = True
+        batch = {
+            "nodes": sds((N, d["d_feat"])),
+            "edge_src": sds((E,), jnp.int32),
+            "edge_dst": sds((E,), jnp.int32),
+            "node_mask": sds((N,), jnp.bool_),
+            "edge_mask": sds((E,), jnp.bool_),
+            "graph_id": sds((N,), jnp.int32),
+        }
+        if needs_pos(arch_id):
+            batch["pos"] = sds((N, 3))
+        if needs_triplets(arch_id):
+            T = E * d["triplet_cap"]
+            batch["triplet_kj"] = sds((T,), jnp.int32)
+            batch["triplet_ji"] = sds((T,), jnp.int32)
+            batch["triplet_mask"] = sds((T,), jnp.bool_)
+        if node_level:
+            batch["labels"] = sds((N,), jnp.int32)
+            batch["label_mask"] = sds((N,))
+        else:
+            batch["energy"] = sds((n_graphs, 1))
+        return {"batch": batch, "n_graphs": n_graphs,
+                "node_level": node_level}
+    return specs

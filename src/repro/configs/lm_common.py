@@ -1,0 +1,51 @@
+"""Shared shape grid + input specs for the LM-family architectures."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from ..models import transformer as T
+from .base import ShapeCell, sds
+
+FULL_ATTN_SKIP = ("pure full-attention architecture (GQA/MLA softmax "
+                  "attention): long_500k requires sub-quadratic attention; "
+                  "skipped per the shape-grid rules, see DESIGN.md §5")
+
+
+def lm_shapes() -> tuple:
+    return (
+        ShapeCell("train_4k", "train",
+                  {"seq_len": 4096, "global_batch": 256}),
+        ShapeCell("prefill_32k", "prefill",
+                  {"seq_len": 32768, "global_batch": 32}),
+        ShapeCell("decode_32k", "decode",
+                  {"seq_len": 32768, "global_batch": 128}),
+        ShapeCell("long_500k", "decode",
+                  {"seq_len": 524288, "global_batch": 1},
+                  skip_reason=FULL_ATTN_SKIP),
+    )
+
+
+def lm_input_specs(cfg: T.TransformerConfig, cell: ShapeCell
+                   ) -> Dict[str, Any]:
+    B = cell.dims["global_batch"]
+    S = cell.dims["seq_len"]
+    if cell.kind == "train":
+        return {"batch": {"tokens": sds((B, S), jnp.int32),
+                          "labels": sds((B, S), jnp.int32)}}
+    if cell.kind == "prefill":
+        return {"batch": {"tokens": sds((B, S), jnp.int32)}}
+    if cell.kind == "decode":
+        L, Hkv, D = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        if cfg.mla is not None:
+            r, pr = cfg.mla.kv_lora_rank, cfg.mla.rope_head_dim
+            cache = (sds((L, B, S, r), cfg.dtype),
+                     sds((L, B, S, 1, pr), cfg.dtype))
+        else:
+            cache = (sds((L, B, S, Hkv, D), cfg.dtype),
+                     sds((L, B, S, Hkv, D), cfg.dtype))
+        return {"tokens": sds((B, 1), jnp.int32),
+                "cache": cache,
+                "cache_len": sds((), jnp.int32)}
+    raise ValueError(cell.kind)

@@ -1,0 +1,51 @@
+"""The paper's own workload as a distributed config: (r, s) nucleus
+decomposition at SNAP-graph scale, lowered via shard_map for the dry-run.
+
+Cells correspond to the paper's largest inputs (Table 1): livejournal and
+orkut at (2,3) (k-truss-style) and (1,2) (k-core).  Dims record the r-clique
+and s-clique counts the incidence structure must hold; the s-clique axis is
+sharded across the full mesh, r-clique state is replicated (one all-reduce
+per peel round — see repro.core.distributed).
+"""
+import jax.numpy as jnp
+
+from .base import ArchSpec, ShapeCell, register, sds
+
+SHAPES = (
+    # n_r = #r-cliques, n_s = #s-cliques, C = C(s, r)
+    ShapeCell("livejournal_23", "decomp",
+              {"n_r": 34_681_189, "n_s": 177_820_130, "C": 3,
+               "r": 2, "s": 3, "n": 3_997_962}),
+    ShapeCell("orkut_23", "decomp",
+              {"n_r": 117_185_083, "n_s": 627_584_181, "C": 3,
+               "r": 2, "s": 3, "n": 3_072_441}),
+    ShapeCell("orkut_12", "decomp",
+              {"n_r": 3_072_441, "n_s": 117_185_083, "C": 2,
+               "r": 1, "s": 2, "n": 3_072_441}),
+    ShapeCell("livejournal_34", "decomp",
+              {"n_r": 177_820_130, "n_s": 509_334_804, "C": 4,
+               "r": 3, "s": 4, "n": 3_997_962}),
+)
+
+
+def make_config():
+    return {"kind": "nucleus", "schedule": "approx", "delta": 0.1}
+
+
+def make_smoke_config():
+    return {"kind": "nucleus", "schedule": "exact", "delta": 0.1}
+
+
+def input_specs(cfg, cell: ShapeCell):
+    d = cell.dims
+    return {"inc_rid": sds((d["n_s"], d["C"]), jnp.int32),
+            "deg0": sds((d["n_r"],), jnp.int32)}
+
+
+SPEC = register(ArchSpec(
+    arch_id="nucleus", family="core",
+    make_config=make_config, make_smoke_config=make_smoke_config,
+    shapes=SHAPES, input_specs=input_specs,
+    notes="the paper's technique itself, sharded: one int32 (n_r,) "
+          "all-reduce per peel round; approx schedule bounds rounds at "
+          "O(log^2 n)"))

@@ -1,0 +1,26 @@
+"""The paper's contribution: parallel (r, s) nucleus decomposition + hierarchy.
+
+Public surface:
+  build_problem            — (r, s) incidence structure over a Graph
+  exact_coreness           — ARB-NUCLEUS analog (bucketed parallel peeling)
+  approx_coreness          — APPROX-ARB-NUCLEUS (Alg. 2, geometric buckets)
+  build_hierarchy_levels   — ANH-TE (two-phase, level-descending connectivity)
+  build_hierarchy_basic    — ANH-BL (per-level from-scratch baseline)
+  build_hierarchy_interleaved — ANH-EL (Alg. 3+5, uf + L, single pass)
+  nh_full / nh_coreness / nh_hierarchy — sequential NH baseline + oracle
+  cut_hierarchy / nuclei_without_hierarchy — Fig. 10 queries
+  sharded_decomposition    — shard_map-distributed peeling (multi-pod ready)
+"""
+from .incidence import NucleusProblem, build_problem
+from .peel import PeelResult, exact_coreness, approx_coreness
+from .hierarchy import (HierarchyTree, build_hierarchy_levels,
+                        build_hierarchy_basic, hierarchy_edges)
+from .interleaved import (LinkState, InterleavedResult,
+                          build_hierarchy_interleaved,
+                          construct_tree_efficient)
+from .nh_baseline import (nh_coreness, nh_hierarchy, nh_full,
+                          brute_force_coreness)
+from .nuclei import (cut_hierarchy, nuclei_without_hierarchy,
+                     nucleus_vertex_sets, edge_density, same_partition)
+from .distributed import (PeelSchedule, sharded_decomposition,
+                          make_sharded_decomposition, pad_incidence)

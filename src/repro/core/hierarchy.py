@@ -1,0 +1,216 @@
+"""Hierarchy construction: ANH-TE / ANH-BL analogs (paper §5, §7.4).
+
+Tree representation: node ids 0..n_r-1 are leaves (one per r-clique), internal
+nodes are appended.  `parent[i] == -1` marks roots; `level[i]` is the merge
+level (for leaves: the clique's core number).  A forest with n_r leaves where
+every internal node has >= 2 children has < 2 * n_r nodes, so arrays are
+preallocated.
+
+TPU adaptation notes (see DESIGN.md §3):
+  * Algorithm 1's per-level linked lists + list ranking become flat edge
+    arrays grouped by level with one sort.
+  * Chain reduction: per s-clique, members sorted by core descending and
+    linked consecutively give identical per-level connectivity as all
+    O(C^2) pairs with only C-1 edges (beyond-paper optimization; the
+    all-pairs mode is kept for cross-validation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph import INT, connected_components, pointer_jump
+from .incidence import NucleusProblem
+
+
+@dataclasses.dataclass
+class HierarchyTree:
+    n_leaves: int
+    parent: np.ndarray  # (n_nodes,) int64, -1 for roots
+    level: np.ndarray   # (n_nodes,) int64
+
+    @property
+    def n_nodes(self) -> int:
+        return int(self.parent.shape[0])
+
+    @property
+    def n_internal(self) -> int:
+        return self.n_nodes - self.n_leaves
+
+    def ancestor_at_level(self, c: int) -> np.ndarray:
+        """For each leaf: highest ancestor with level >= c (-1 if core < c).
+
+        This is the "cut the hierarchy" query behind Fig. 10: the returned
+        node ids label the c-(r,s) nuclei.
+        """
+        node = np.arange(self.n_leaves, dtype=np.int64)
+        cur = np.where(self.level[: self.n_leaves] >= c, node, -1)
+        while True:
+            valid = cur >= 0
+            p = np.where(valid, self.parent[np.maximum(cur, 0)], -1)
+            ok = (p >= 0) & (self.level[np.maximum(p, 0)] >= c) & valid
+            if not ok.any():
+                return cur
+            cur = np.where(ok, p, cur)
+
+    def join_levels(self, pairs) -> np.ndarray:
+        """Merge level of each (leaf_a, leaf_b) pair; -1 if never joined.
+
+        Canonical comparison metric between hierarchy implementations (the
+        trees may differ by unary-node collapsing, but join levels agree).
+        """
+        pairs = np.asarray(pairs)
+        out = np.full(pairs.shape[0], -1, np.int64)
+        for idx in range(pairs.shape[0]):
+            a, b = int(pairs[idx, 0]), int(pairs[idx, 1])
+            if a == b:
+                out[idx] = self.level[a]
+                continue
+            anc = set()
+            x = a
+            while x != -1:
+                anc.add(x)
+                x = int(self.parent[x])
+            x = b
+            while x != -1:
+                if x in anc:
+                    out[idx] = self.level[x]
+                    break
+                x = int(self.parent[x])
+        return out
+
+
+def new_tree_buffers(n_r: int, core_np: np.ndarray):
+    cap = 2 * max(n_r, 1)
+    parent = np.full(cap, -1, np.int64)
+    level = np.zeros(cap, np.int64)
+    level[:n_r] = core_np
+    node_of = np.arange(n_r, dtype=np.int64)
+    return parent, level, node_of
+
+
+def finish_tree(n_r: int, parent: np.ndarray, level: np.ndarray,
+                next_id: int) -> HierarchyTree:
+    return HierarchyTree(n_leaves=n_r, parent=parent[:next_id].copy(),
+                         level=level[:next_id].copy())
+
+
+# ---------------------------------------------------------------------------
+# Hierarchy edge construction (the L_i tables of Algorithm 1, flattened)
+# ---------------------------------------------------------------------------
+
+def hierarchy_edges(problem: NucleusProblem, core: jnp.ndarray,
+                    chain: bool = True):
+    """(u, v, w) r-clique adjacency edges with w = min(core_u, core_v).
+
+    chain=True emits C-1 consecutive edges per s-clique after an in-row sort
+    by core descending (connectivity-equivalent to all pairs at every level);
+    chain=False emits all C(C,2) pairs (Algorithm 1 verbatim, for tests).
+    Result is deduped and sorted by weight descending.
+    """
+    inc = problem.inc_rid
+    n_s, C = inc.shape
+    if n_s == 0 or C < 2:
+        z = jnp.zeros((0,), INT)
+        return z, z, z
+    cores = core[inc]  # (n_s, C)
+    if chain:
+        order = jnp.argsort(-cores, axis=1, stable=True)
+        rid_s = jnp.take_along_axis(inc, order, axis=1)
+        c_s = jnp.take_along_axis(cores, order, axis=1)
+        u = rid_s[:, :-1].reshape(-1)
+        v = rid_s[:, 1:].reshape(-1)
+        w = c_s[:, 1:].reshape(-1)
+    else:
+        us, vs, ws = [], [], []
+        for i in range(C):
+            for j in range(i + 1, C):
+                us.append(inc[:, i])
+                vs.append(inc[:, j])
+                ws.append(jnp.minimum(cores[:, i], cores[:, j]))
+        u, v, w = jnp.concatenate(us), jnp.concatenate(vs), jnp.concatenate(ws)
+    lo = jnp.minimum(u, v)
+    hi = jnp.maximum(u, v)
+    order = jnp.lexsort((hi, lo, -w))
+    lo, hi, w = lo[order], hi[order], w[order]
+    dup = jnp.concatenate([jnp.zeros((1,), bool),
+                           (lo[1:] == lo[:-1]) & (hi[1:] == hi[:-1]) & (w[1:] == w[:-1])])
+    keep = ~dup
+    return lo[keep], hi[keep], w[keep]
+
+
+def emit_merges(t_old: np.ndarray, t_new: np.ndarray, wv: int,
+                parent: np.ndarray, level: np.ndarray, node_of: np.ndarray,
+                next_id: int) -> int:
+    """Group old roots by new root; every group of >= 2 gets a new parent."""
+    if t_old.shape[0] == 0:
+        return next_id
+    order = np.argsort(t_new, kind="stable")
+    tn, to = t_new[order], t_old[order]
+    uniq, counts = np.unique(tn, return_counts=True)
+    merged = counts >= 2
+    if not merged.any():
+        return next_id
+    n_new = int(merged.sum())
+    ids = np.full(uniq.shape[0], -1, np.int64)
+    ids[merged] = next_id + np.arange(n_new)
+    inv = np.repeat(np.arange(uniq.shape[0]), counts)
+    child_mask = merged[inv]
+    children_nodes = node_of[to[child_mask]]
+    parent[children_nodes] = ids[inv][child_mask]
+    level[next_id:next_id + n_new] = int(wv)
+    node_of[uniq[merged]] = ids[merged]
+    return next_id + n_new
+
+
+def build_hierarchy_levels(problem: NucleusProblem, core: jnp.ndarray,
+                           chain: bool = True) -> HierarchyTree:
+    """ANH-TE analog: one union-find forest swept over levels descending."""
+    n_r = problem.n_r
+    core_np = np.asarray(core)
+    u, v, w = hierarchy_edges(problem, core, chain=chain)
+    w_np = np.asarray(w)
+    parent, level, node_of = new_tree_buffers(n_r, core_np)
+    next_id = n_r
+    comp = jnp.arange(n_r, dtype=INT)
+    neg, starts = np.unique(-w_np, return_index=True)
+    distinct = -neg  # descending levels; starts index the sorted edge array
+    bounds = list(starts) + [w_np.shape[0]]
+    for gi, wv in enumerate(distinct):
+        sl = slice(int(bounds[gi]), int(bounds[gi + 1]))
+        uu, vv = u[sl], v[sl]
+        old = pointer_jump(comp)
+        new = connected_components(n_r, uu, vv, init=old)
+        touched = np.unique(np.asarray(old[jnp.concatenate([uu, vv])]))
+        t_new = np.asarray(new)[touched]
+        next_id = emit_merges(touched, t_new, int(wv), parent, level, node_of,
+                              next_id)
+        comp = new
+    return finish_tree(n_r, parent, level, next_id)
+
+
+def build_hierarchy_basic(problem: NucleusProblem, core: jnp.ndarray,
+                          chain: bool = True) -> HierarchyTree:
+    """ANH-BL analog: connectivity re-run from scratch per level (k passes).
+
+    Deliberately work-inefficient (the paper's LINK-BASIC baseline): level i
+    re-unions every edge of weight >= i instead of reusing the forest.
+    """
+    n_r = problem.n_r
+    core_np = np.asarray(core)
+    u, v, w = hierarchy_edges(problem, core, chain=chain)
+    w_np = np.asarray(w)
+    parent, level, node_of = new_tree_buffers(n_r, core_np)
+    next_id = n_r
+    prev = np.arange(n_r, dtype=np.int64)
+    for wv in np.unique(w_np)[::-1]:
+        sel = jnp.asarray(w_np >= wv)  # every qualifying edge, from scratch
+        new = connected_components(n_r, u[sel], v[sel])
+        new_np = np.asarray(new)
+        prev_roots = np.unique(prev)
+        next_id = emit_merges(prev_roots, new_np[prev_roots], int(wv), parent,
+                              level, node_of, next_id)
+        prev = new_np
+    return finish_tree(n_r, parent, level, next_id)

@@ -1,0 +1,87 @@
+"""The (r, s) incidence structure: the paper's multi-level hash tables, dense.
+
+Materialized ONCE per problem (the same O(m * alpha^{s-2}) space the paper's
+L_i tables occupy), it drives every later stage with gathers/segment-sums:
+
+  r_cliques   (n_r, r)  lexicographically sorted unique rows; id = row index
+  inc_rid     (n_s, C)  the C = C(s, r) member r-clique ids of each s-clique
+  mem CSR               r-clique id -> incident s-clique ids
+  deg0        (n_r,)    initial s-clique-degree of each r-clique
+"""
+from __future__ import annotations
+
+import dataclasses
+from math import comb
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph import (Graph, INT, csr_from_pairs, list_cliques, sort_join,
+                     subset_columns)
+from ..graph.orientation import degree_rank, approx_degeneracy_rank
+from ..graph.container import orient
+
+
+@dataclasses.dataclass
+class NucleusProblem:
+    g: Graph
+    r: int
+    s: int
+    r_cliques: jnp.ndarray      # (n_r, r) int32, lexsorted rows
+    inc_rid: jnp.ndarray        # (n_s, C) int32
+    mem_offsets: jnp.ndarray    # (n_r + 1,) int32
+    mem_sids: jnp.ndarray       # (n_s * C,) int32
+    deg0: jnp.ndarray           # (n_r,) int32
+
+    @property
+    def n_r(self) -> int:
+        return int(self.r_cliques.shape[0])
+
+    @property
+    def n_s(self) -> int:
+        return int(self.inc_rid.shape[0])
+
+    @property
+    def n_sub(self) -> int:
+        return comb(self.s, self.r)
+
+
+def pick_rank(g: Graph):
+    """Pick the orientation with the smaller max out-degree (cheap to try both)."""
+    cand = [degree_rank(g), approx_degeneracy_rank(g)]
+    dgs = [orient(g, c) for c in cand]
+    return min(dgs, key=lambda d: d.dmax)
+
+
+def build_problem(g: Graph, r: int, s: int,
+                  rank: Optional[jnp.ndarray] = None) -> NucleusProblem:
+    assert 1 <= r < s, (r, s)
+    dg = None
+    if rank is None:
+        dg = pick_rank(g)
+    levels = list_cliques(g, [r, s], rank=rank, dg=dg)
+    r_rows = levels.levels[r]
+    s_rows = levels.levels[s]
+    # r-clique table: rows are already unique; sort lexicographically for ids.
+    from ..graph.cliques import lexsort_rows
+    order = lexsort_rows(r_rows) if r_rows.shape[0] else jnp.arange(0, dtype=INT)
+    r_table = r_rows[order]
+    n_r = int(r_table.shape[0])
+    n_s = int(s_rows.shape[0])
+    C = comb(s, r)
+    if n_s:
+        subs = [s_rows[:, list(cols)] for cols in subset_columns(s, r)]
+        queries = jnp.concatenate(subs, axis=0)  # (C * n_s, r), grouped by combo
+        ids = sort_join(r_table, queries)
+        inc_rid = jnp.stack(jnp.split(ids, C), axis=1).astype(INT)  # (n_s, C)
+    else:
+        inc_rid = jnp.zeros((0, C), INT)
+    flat_rid = inc_rid.reshape(-1)
+    flat_sid = jnp.repeat(jnp.arange(n_s, dtype=INT), C, total_repeat_length=n_s * C)
+    mem_offsets, mem_sids = csr_from_pairs(flat_rid, flat_sid, n_r)
+    deg0 = jnp.zeros((n_r,), INT)
+    if n_s:
+        deg0 = deg0.at[flat_rid].add(1)
+    return NucleusProblem(g=g, r=r, s=s, r_cliques=r_table, inc_rid=inc_rid,
+                          mem_offsets=mem_offsets, mem_sids=mem_sids, deg0=deg0)

@@ -1,0 +1,255 @@
+"""Interleaved hierarchy construction — ANH-EL (paper Alg. 3 + Alg. 5).
+
+The paper's LINK-EFFICIENT maintains, *while peeling*:
+  * ``uf`` — one union-find connecting r-cliques with EQUAL core numbers that
+    are s-clique-connected considering only cliques with core >= that number;
+  * ``L``  — per uf-component root, the "nearest" enclosing lower core: an
+    r-clique R' with maximal ND[R'] < ND[root] connected to the component
+    through cliques with core >= ND[R'].
+
+The sequential algorithm resolves conflicts with CAS loops and recursive
+cascades.  On TPU-style dense arrays we replace the cascade with a *batched
+fixpoint*: each peel round materializes its link multiset, then `uf`/`L`
+converge by iterated grouped reductions (argmax-by-core per target component).
+Each fixpoint iteration either merges components or strictly raises
+core[L[root]] somewhere, so it terminates; the per-round worklists mirror the
+sequential cascade one "generation" at a time.
+
+Link-generation work matches ANH-EL's bound: per round, per incident s-clique,
+we emit O(|A ∩ S|) pairs — the chain reduction of DESIGN.md §3 — instead of
+all O(C^2) member pairs (connectivity-equivalent at every level; proven by the
+prefix argument in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..graph import INT
+from .incidence import NucleusProblem
+from .hierarchy import HierarchyTree
+from .peel import PeelResult, exact_coreness, approx_coreness
+
+
+def _resolve(parent: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Vectorized find: chase parent pointers to roots (path-halving style)."""
+    x = x.copy()
+    while True:
+        p = parent[x]
+        if (p == x).all():
+            return x
+        x = p
+
+
+@dataclasses.dataclass
+class LinkState:
+    """The two arrays of LINK-EFFICIENT: uf parents + nearest-core table L."""
+
+    parent: np.ndarray  # (n_r,) int64 — same-core union-find
+    L: np.ndarray       # (n_r,) int64 — nearest lower core per root, -1 empty
+    core: np.ndarray    # (n_r,) int64 — final core numbers of peeled cliques
+    stats_links: int = 0
+    stats_unions: int = 0
+
+    @classmethod
+    def create(cls, n_r: int) -> "LinkState":
+        return cls(parent=np.arange(n_r, dtype=np.int64),
+                   L=np.full(n_r, -1, np.int64),
+                   core=np.zeros(n_r, np.int64))
+
+    # -- batched LINK-EFFICIENT -------------------------------------------
+    def process_links(self, a: np.ndarray, b: np.ndarray,
+                      max_gens: int = 10_000) -> None:
+        """Fixpoint over the link worklist; (a, b) need no core ordering."""
+        core, parent, L = self.core, self.parent, self.L
+        gens = 0
+        while a.shape[0]:
+            gens += 1
+            if gens > max_gens:  # pragma: no cover - termination guard
+                raise RuntimeError("LINK fixpoint did not converge")
+            self.stats_links += int(a.shape[0])
+            a = _resolve(parent, a)
+            b = _resolve(parent, b)
+            # orient: core[a] <= core[b]
+            swap = core[a] > core[b]
+            a2 = np.where(swap, b, a)
+            b2 = np.where(swap, a, b)
+            a, b = a2, b2
+            keep = a != b
+            a, b = a[keep], b[keep]
+            if a.shape[0] == 0:
+                return
+            eq = core[a] == core[b]
+            next_a: list[np.ndarray] = []
+            next_b: list[np.ndarray] = []
+            if eq.any():
+                ea, eb = a[eq], b[eq]
+                # batched union by min-root hooking to a fixpoint
+                old_roots = np.unique(np.concatenate([ea, eb]))
+                while True:
+                    ra, rb = _resolve(parent, ea), _resolve(parent, eb)
+                    m = np.minimum(ra, rb)
+                    if (ra == rb).all():
+                        break
+                    np.minimum.at(parent, ra, m)
+                    np.minimum.at(parent, rb, m)
+                self.stats_unions += int(ea.shape[0])
+                new_roots = _resolve(parent, old_roots)
+                changed = new_roots != old_roots
+                # losers hand their L to the new root via a fresh link pair
+                losers = old_roots[changed]
+                lvals = L[losers]
+                has = lvals >= 0
+                next_a.append(lvals[has])
+                next_b.append(new_roots[changed][has])
+                L[losers] = -1
+            lt = ~eq
+            if lt.any():
+                la, lb = a[lt], b[lt]
+                lb = _resolve(parent, lb)  # roots may have moved in eq step
+                la = _resolve(parent, la)
+                # candidates for L[lb]: the incoming la's plus the current L
+                tgt = np.unique(lb)
+                cur = L[tgt]
+                curhas = cur >= 0
+                cand_t = np.concatenate([lb, tgt[curhas]])
+                cand_v = np.concatenate([la, cur[curhas]])
+                # winner per target = argmax core (ties -> min id)
+                o = np.lexsort((cand_v, -core[cand_v], cand_t))
+                ct, cv = cand_t[o], cand_v[o]
+                first = np.concatenate([[True], ct[1:] != ct[:-1]])
+                winners = cv[first]
+                L[ct[first]] = winners
+                # every non-winner candidate links against its target's winner
+                lose = ~first
+                if lose.any():
+                    lt_t, lt_v = ct[lose], cv[lose]
+                    slot = np.searchsorted(ct[first], lt_t)
+                    wv = winners[slot]
+                    k2 = lt_v != wv  # drop exact duplicates of the winner
+                    next_a.append(lt_v[k2])
+                    next_b.append(wv[k2])
+            a = np.concatenate(next_a) if next_a else np.zeros(0, np.int64)
+            b = np.concatenate(next_b) if next_b else np.zeros(0, np.int64)
+
+
+def _round_links(problem: NucleusProblem, a_ids: np.ndarray,
+                 last_peeled: np.ndarray, mem_off: np.ndarray,
+                 mem_sid: np.ndarray, inc: np.ndarray, peeled: np.ndarray):
+    """Chain-reduced link pairs for one peel round.
+
+    Per incident s-clique S: connect A ∩ S as a chain and hook its head to the
+    most recently peeled member of S (which has the max core among previously
+    peeled members — peel values are monotone over rounds).
+    """
+    if a_ids.shape[0] == 0:
+        return (np.zeros(0, np.int64),) * 2, last_peeled
+    # all s-cliques incident to the peeled set (deduped)
+    counts = mem_off[a_ids + 1] - mem_off[a_ids]
+    sids = np.concatenate([mem_sid[mem_off[i]:mem_off[i + 1]] for i in a_ids]) \
+        if counts.sum() else np.zeros(0, np.int64)
+    sids = np.unique(sids)
+    if sids.shape[0] == 0:
+        return (np.zeros(0, np.int64),) * 2, last_peeled
+    members = inc[sids]                      # (S, C)
+    in_a = np.zeros(peeled.shape[0], bool)
+    in_a[a_ids] = True
+    am = in_a[members]                       # (S, C) members in this round's A
+    # chain within A∩S: sort each row so A-members are leading, link consecutive
+    order = np.argsort(~am, axis=1, kind="stable")
+    mem_sorted = np.take_along_axis(members, order, axis=1)
+    am_sorted = np.take_along_axis(am, order, axis=1)
+    cnt = am_sorted.sum(axis=1)
+    u_chain = mem_sorted[:, :-1][am_sorted[:, 1:]]
+    v_chain = mem_sorted[:, 1:][am_sorted[:, 1:]]
+    # head of each chain hooks to the previous representative of S (if any)
+    head = mem_sorted[:, 0]
+    prev = last_peeled[sids]
+    hhas = (prev >= 0) & (cnt > 0)
+    u_head, v_head = prev[hhas], head[hhas]
+    # update last-peeled representative
+    upd = cnt > 0
+    last_peeled[sids[upd]] = head[upd]
+    a = np.concatenate([u_chain.astype(np.int64), u_head.astype(np.int64)])
+    b = np.concatenate([v_chain.astype(np.int64), v_head.astype(np.int64)])
+    return (a, b), last_peeled
+
+
+@dataclasses.dataclass
+class InterleavedResult:
+    core: jnp.ndarray
+    tree: HierarchyTree
+    rounds: int
+    state: LinkState
+
+
+def construct_tree_efficient(problem: NucleusProblem,
+                             state: LinkState) -> HierarchyTree:
+    """CONSTRUCT-TREE-EFFICIENT (Alg. 5, Lines 28–36), fully batched."""
+    n_r = problem.n_r
+    parent_uf = _resolve(state.parent, np.arange(n_r, dtype=np.int64))
+    core = state.core
+    cap = 2 * max(n_r, 1)
+    parent = np.full(cap, -1, np.int64)
+    level = np.zeros(cap, np.int64)
+    level[:n_r] = core
+    next_id = n_r
+    # one internal node per multi-member uf component
+    roots, counts = np.unique(parent_uf, return_counts=True)
+    multi = counts >= 2
+    node_of = np.arange(n_r, dtype=np.int64)  # root -> representing tree node
+    n_new = int(multi.sum())
+    ids = next_id + np.arange(n_new)
+    node_of[roots[multi]] = ids
+    level[ids] = core[roots[multi]]
+    # leaves of multi components point at their component node
+    comp_node = node_of[parent_uf]
+    is_multi_leaf = comp_node != np.arange(n_r)
+    parent[:n_r][is_multi_leaf] = comp_node[is_multi_leaf]
+    next_id += n_new
+    # hook each component to its nearest enclosing core via L
+    lvals = state.L[roots]
+    has = lvals >= 0
+    tgt_roots = _resolve(state.parent, lvals[has])
+    parent[node_of[roots[has]]] = node_of[tgt_roots]
+    return HierarchyTree(n_leaves=n_r, parent=parent[:next_id].copy(),
+                         level=level[:next_id].copy())
+
+
+def build_hierarchy_interleaved(
+        problem: NucleusProblem,
+        mode: Literal["exact", "approx"] = "exact",
+        delta: float = 0.1,
+        backend: Literal["gather", "dense"] = "gather") -> InterleavedResult:
+    """ANH-EL: peel + LINK-EFFICIENT in a single pass, then one tree post-pass."""
+    n_r, n_s = problem.n_r, problem.n_s
+    state = LinkState.create(n_r)
+    mem_off = np.asarray(problem.mem_offsets).astype(np.int64)
+    mem_sid = np.asarray(problem.mem_sids).astype(np.int64)
+    inc = np.asarray(problem.inc_rid).astype(np.int64)
+    last_peeled = np.full(n_s, -1, np.int64)
+    peeled_np = np.zeros(n_r, bool)
+
+    def collect(a_ids_j, core_j, peeled_j):
+        nonlocal last_peeled, peeled_np
+        a_ids = np.asarray(a_ids_j).astype(np.int64)
+        state.core[a_ids] = np.asarray(core_j)[a_ids]
+        peeled_np[a_ids] = True
+        (a, b), last_peeled[:] = _round_links(
+            problem, a_ids, last_peeled, mem_off, mem_sid, inc, peeled_np)
+        state.process_links(a, b)
+
+    if mode == "exact":
+        res: PeelResult = exact_coreness(problem, backend=backend,
+                                         collect_links=collect)
+    else:
+        # NOTE: the tree keeps the (unclipped) bucket values that drove the
+        # LINK equality structure; res.core carries the clipped estimates.
+        res = approx_coreness(problem, delta=delta, backend=backend,
+                              collect_links=collect)
+    tree = construct_tree_efficient(problem, state)
+    return InterleavedResult(core=res.core, tree=tree, rounds=res.rounds,
+                             state=state)

@@ -1,0 +1,78 @@
+"""Nuclei extraction — the Fig. 10 "usefulness of the hierarchy" experiment.
+
+`cut_hierarchy` extracts every c-(r,s) nucleus from a prebuilt hierarchy tree
+by a single upward sweep (cheap).  `nuclei_without_hierarchy` answers the same
+query from core numbers alone by running connectivity over qualifying
+r-cliques (expensive) — the comparison baseline.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+import jax.numpy as jnp
+
+from ..graph import connected_components, INT
+from .hierarchy import HierarchyTree, hierarchy_edges
+from .incidence import NucleusProblem
+
+
+def cut_hierarchy(tree: HierarchyTree, c: int) -> np.ndarray:
+    """Label each leaf (r-clique) with its c-(r,s) nucleus id; -1 if core < c.
+
+    Removing all internal nodes of level < c makes each surviving subtree one
+    c-nucleus; the subtree root id is the label.
+    """
+    return tree.ancestor_at_level(c)
+
+
+def nuclei_without_hierarchy(problem: NucleusProblem, core: jnp.ndarray,
+                             c: int) -> np.ndarray:
+    """The no-hierarchy baseline: connectivity over r-cliques with core >= c."""
+    n_r = problem.n_r
+    u, v, w = hierarchy_edges(problem, core, chain=True)
+    sel = w >= c
+    labels = connected_components(n_r, u[sel], v[sel])
+    out = np.asarray(labels).astype(np.int64)
+    out[np.asarray(core) < c] = -1
+    return out
+
+
+def nucleus_vertex_sets(problem: NucleusProblem, labels: np.ndarray
+                        ) -> Dict[int, np.ndarray]:
+    """Expand nucleus labels over r-cliques into vertex sets per nucleus."""
+    rc = np.asarray(problem.r_cliques)
+    out: Dict[int, List[int]] = {}
+    for rid, lab in enumerate(labels):
+        if lab < 0:
+            continue
+        out.setdefault(int(lab), []).append(rid)
+    return {lab: np.unique(rc[rids].reshape(-1)) for lab, rids in out.items()}
+
+
+def edge_density(g_edges: np.ndarray, vertices: np.ndarray) -> float:
+    """|E(S)| / C(|S|, 2) — the paper's subgraph quality metric (Fig. 10)."""
+    k = vertices.shape[0]
+    if k < 2:
+        return 0.0
+    vs = set(int(x) for x in vertices)
+    inside = sum(1 for u, v in g_edges if int(u) in vs and int(v) in vs)
+    return inside / (k * (k - 1) / 2)
+
+
+def same_partition(a: np.ndarray, b: np.ndarray) -> bool:
+    """Do two labelings induce the same partition (ignoring label names)?"""
+    a = np.asarray(a)
+    b = np.asarray(b)
+    if a.shape != b.shape:
+        return False
+    if ((a < 0) != (b < 0)).any():
+        return False
+    sel = a >= 0
+    a, b = a[sel], b[sel]
+    # canonical form: label -> first index at which it appears
+    def canon(x):
+        _, first = np.unique(x, return_index=True)
+        remap = {int(x[i]): r for r, i in enumerate(np.sort(first))}
+        return np.array([remap[int(v)] for v in x])
+    return bool((canon(a) == canon(b)).all())

@@ -1,0 +1,3 @@
+from .pipeline import (TokenStream, TokenStreamConfig, RecsysStream,
+                       RecsysStreamConfig, GraphMinibatchStream,
+                       synthetic_molecules)

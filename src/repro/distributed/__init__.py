@@ -1,0 +1,3 @@
+from . import sharding
+from .runtime import (StragglerMonitor, PreemptionGuard, ElasticPlan,
+                      HeartbeatLog)

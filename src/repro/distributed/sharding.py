@@ -1,0 +1,198 @@
+"""Sharding rules: logical-axis PartitionSpecs per architecture family.
+
+Conventions (MaxText-style, adapted):
+  mesh axes: single pod  -> ("data", "model")
+             multi-pod   -> ("pod", "data", "model")
+  * batch/tokens shard over the data axes (("pod","data") when present) — DP.
+  * weight matrices shard their contraction dim over "data" (FSDP/ZeRO-3;
+    GSPMD inserts the all-gathers) and their output/head/expert/vocab dim
+    over "model" (TP/EP) — 2D sharding, so per-device optimizer state is
+    params/|mesh|.
+  * axes that do not divide evenly stay unsharded (checked at build time).
+
+`tree_specs` resolves a rule table (path-substring -> spec template) against
+a param pytree; `shard_tree` produces NamedShardings for jit in_shardings.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def fsdp_axis(mesh: Mesh) -> Optional[str]:
+    return "data" if "data" in mesh.axis_names else None
+
+
+def model_axis(mesh: Mesh) -> Optional[str]:
+    return "model" if "model" in mesh.axis_names else None
+
+
+def _axis_size(mesh: Mesh, name: Optional[str]) -> int:
+    if name is None:
+        return 1
+    return mesh.shape[name]
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return True
+    if isinstance(axis, tuple):
+        size = int(np.prod([_axis_size(mesh, a) for a in axis]))
+    else:
+        size = _axis_size(mesh, axis)
+    return dim % size == 0
+
+
+def safe_spec(shape: Tuple[int, ...], template: Sequence, mesh: Mesh) -> P:
+    """Drop sharding on axes that don't divide; keep the rest."""
+    spec = []
+    for dim, ax in zip(shape, template):
+        spec.append(ax if (ax is not None and _fits(dim, mesh, ax)) else None)
+    return P(*spec)
+
+
+def tree_specs(params: Any, rules: Dict[str, Sequence], mesh: Mesh,
+               default=()) -> Any:
+    """Map each leaf to a PartitionSpec via the first matching path rule."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        template = None
+        for pat, tmpl in rules.items():
+            if re.search(pat, key):
+                template = tmpl
+                break
+        if template is None:
+            template = list(default) + [None] * (leaf.ndim - len(default))
+        template = list(template)[: leaf.ndim] + [None] * (
+            leaf.ndim - len(template))
+        out.append(safe_spec(leaf.shape, template, mesh))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def shard_tree(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, spec: P):
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# per-family rule tables
+# ---------------------------------------------------------------------------
+
+def lm_param_rules(mesh: Mesh, moe: bool,
+                   moe_ep_data: bool = False) -> Dict[str, Sequence]:
+    """Transformer params (stacked layers: leading axis = L, never sharded)."""
+    f, m = fsdp_axis(mesh), model_axis(mesh)
+    rules = {
+        r"embed": [m, None],
+        r"unembed": [f, m],
+        r"layers/w_dkv": [None, f, m],
+        r"layers/w_kr": [None, f, None],
+        r"layers/w_uk": [None, None, m],
+        r"layers/w_uv": [None, None, m],
+        r"layers/wq": [None, f, m],
+        r"layers/wk": [None, f, m],
+        r"layers/wv": [None, f, m],
+        r"layers/wo": [None, m, f],
+        r"layers/ln1": [None, None],
+        r"layers/ln2": [None, None],
+        r"ln_f": [None],
+    }
+    if moe:
+        if moe_ep_data:
+            # EP over the token-sharding axis (all-to-all dispatch) with TP
+            # inside each expert over "model"
+            expert_rules = {
+                r"layers/w1": [None, f, None, m],
+                r"layers/w2": [None, f, m, None],
+                r"layers/w3": [None, f, None, m],
+            }
+        else:
+            # experts over model (EP), d over data (FSDP)
+            expert_rules = {
+                r"layers/w1": [None, m, f, None],
+                r"layers/w2": [None, m, None, f],
+                r"layers/w3": [None, m, f, None],
+            }
+        rules.update({
+            r"layers/router": [None, f, None],
+            **expert_rules,
+            r"layers/sw1": [None, f, m],
+            r"layers/sw2": [None, m, f],
+            r"layers/sw3": [None, f, m],
+        })
+    else:
+        rules.update({
+            r"layers/w1": [None, f, m],
+            r"layers/w2": [None, m, f],
+            r"layers/w3": [None, f, m],
+        })
+    return rules
+
+
+def lm_batch_spec(mesh: Mesh) -> P:
+    return P(data_axes(mesh), None)
+
+
+def lm_cache_spec(mesh: Mesh, kv_heads: int, mla: bool) -> Any:
+    """KV cache specs: batch over data axes; sequence over "model" (decode
+    attention becomes a distributed flash-decode — GSPMD inserts the
+    softmax-stat all-reduces). Stacked layer axis leads."""
+    d = data_axes(mesh)
+    m = model_axis(mesh)
+    if mla:  # (L, B, S, r), (L, B, S, 1, pr)
+        return (P(None, d, m, None), P(None, d, m, None, None))
+    return (P(None, d, m, None, None), P(None, d, m, None, None))
+
+
+def gnn_rules(mesh: Mesh) -> Dict[str, Sequence]:
+    """GNN params are small: replicate everything (edges carry the scale)."""
+    return {r".*": []}
+
+
+def gnn_batch_specs(mesh: Mesh, shard_nodes: bool) -> Dict[str, P]:
+    """Edges shard over the full mesh (flattened); nodes replicated unless
+    the graph is huge (ogb_products) in which case features shard too."""
+    all_axes = tuple(mesh.axis_names)
+    node_spec = P(all_axes, None) if shard_nodes else P(None, None)
+    return {
+        "nodes": node_spec,
+        "edge_src": P(all_axes),
+        "edge_dst": P(all_axes),
+        "node_mask": P(all_axes) if shard_nodes else P(None),
+        "edge_mask": P(all_axes),
+        "pos": P(None, None),
+        "graph_id": P(all_axes) if shard_nodes else P(None),
+        "triplet_kj": P(all_axes),
+        "triplet_ji": P(all_axes),
+        "triplet_mask": P(all_axes),
+        "labels": P(all_axes) if shard_nodes else P(None),
+        "label_mask": P(all_axes) if shard_nodes else P(None),
+    }
+
+
+def din_rules(mesh: Mesh) -> Dict[str, Sequence]:
+    m = model_axis(mesh)
+    return {
+        r"item_table": [m, None],   # the classic vocab-sharded embedding
+        r"cate_table": [m, None],
+        r"user_table": [m, None],
+        r".*": [],
+    }
+
+
+def din_batch_spec(mesh: Mesh) -> P:
+    return P(data_axes(mesh))

@@ -1,0 +1,52 @@
+"""Connected components via min-hooking + pointer jumping.
+
+Data-parallel replacement for both the paper's linear-work connectivity [22]
+and the Jayanti–Tarjan concurrent union-find: every round scatter-mins the
+smaller endpoint label over each edge, then pointer-jumps labels to their
+fixpoint.  Deterministic, O(log n) rounds w.h.p. on real graphs, each round a
+fixed pattern of gathers/scatters (the shape TPUs execute well).  We trade the
+paper's O(m) work for O(m log n); DESIGN.md records the trade.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .container import INT
+
+
+def pointer_jump(labels: jnp.ndarray, iters: int | None = None) -> jnp.ndarray:
+    """Resolve label forest to roots: labels[i] <- labels[labels[i]] to fixpoint."""
+    n = int(labels.shape[0])
+    if n == 0:
+        return labels
+    max_iters = iters if iters is not None else max(1, n.bit_length() + 1)
+    for _ in range(max_iters):
+        nxt = labels[labels]
+        if bool(jnp.all(nxt == labels)):
+            return labels
+        labels = nxt
+    return labels
+
+
+def connected_components(n: int, u: jnp.ndarray, v: jnp.ndarray,
+                         init: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Component labels (min vertex id reachable) for graph (n, edges u-v).
+
+    `init` seeds labels (e.g. an existing union-find forest, resolved or not).
+    """
+    labels = jnp.arange(n, dtype=INT) if init is None else pointer_jump(init.astype(INT))
+    if int(u.shape[0]) == 0:
+        return labels
+    while True:
+        lu, lv = labels[u], labels[v]
+        m = jnp.minimum(lu, lv)
+        # Hook at the ROOTS (lu, lv), not the endpoints: hooking endpoints
+        # only relabels vertices incident to the current edge set, which
+        # fractures components seeded via `init` whose members are not
+        # endpoints.  Root-hooking + jumping converges for both cases.
+        new = labels.at[lu].min(m).at[lv].min(m)
+        new = pointer_jump(new)
+        if bool(jnp.all(new == labels)):
+            return labels
+        labels = new

@@ -1,0 +1,32 @@
+"""Batched union-find on top of min-hooking connectivity.
+
+The root of every set is the minimum member id — deterministic, so parallel
+runs and the sequential oracle agree on representatives.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .connectivity import connected_components, pointer_jump
+from .container import INT
+
+
+@dataclasses.dataclass
+class BatchedUnionFind:
+    parent: jnp.ndarray  # (n,) int32, parent[i] <= i invariant after resolve
+
+    @classmethod
+    def create(cls, n: int) -> "BatchedUnionFind":
+        return cls(parent=jnp.arange(n, dtype=INT))
+
+    def find_all(self) -> jnp.ndarray:
+        self.parent = pointer_jump(self.parent)
+        return self.parent
+
+    def union_edges(self, u: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+        """Unite endpoints of all edges at once; returns resolved labels."""
+        self.parent = connected_components(int(self.parent.shape[0]), u, v,
+                                           init=self.parent)
+        return self.parent

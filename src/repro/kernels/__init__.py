@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  tricount        — tiled boolean matmul (A@A)⊙A: the paper's intersection
+                    loop on the MXU
+  flash_attention — online-softmax attention (LM prefill/serve hot spot)
+  segment_sum     — sorted-segment one-hot-matmul reduction (GNN / recsys)
+
+Each kernel ships ops.py (jitted wrapper) + ref.py (pure-jnp oracle); tests
+sweep shapes/dtypes in interpret mode on CPU.
+"""
+from . import ops
+from . import ref

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: flash attention (online softmax, causal option).
+
+The serving/prefill hot spot of the LM family.  Grid = (batch*heads,
+q_blocks, kv_blocks); the kv axis is innermost so the running (max, sum, acc)
+statistics live in VMEM scratch across kv steps — the (Sq, Sk) score matrix
+never exists in HBM.  Causal masking skips fully-masked kv blocks via
+@pl.when (block-level early exit), halving prefill work.
+
+Block sizes default to (128, 128): MXU-aligned on both matmuls
+(Q @ K^T and P @ V).  d_head rides whole in VMEM (<= 256 for all configs).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  n_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = True
+    if causal:
+        # kv block strictly after the last query of this q block: skip
+        run = ki * block_k <= qi * block_q + block_q - 1
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0]                       # (block_q, d)
+        k = k_ref[0]                       # (block_k, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+            p.astype(v_ref.dtype), v_ref[0],
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """q: (B, H, Sq, D); k, v: (B, H, Sk, D) -> (B, H, Sq, D).
+
+    GQA callers repeat/reshape kv heads before the call (zero-copy view).
+    Sq % block_q == 0 and Sk % block_k == 0 (pad at the wrapper).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk)
+    n_q, n_k = Sq // block_q, Sk // block_k
+    qf = q.reshape(B * H, Sq, D)
+    kf = k.reshape(B * H, Sk, D)
+    vf = v.reshape(B * H, Sk, D)
+    out = pl.pallas_call(
+        partial(_flash_kernel, scale=1.0 / np.sqrt(D), causal=causal,
+                block_q=block_q, block_k=block_k, n_k=n_k),
+        grid=(B * H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, D)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tricount_per_edge_ref(adj: jnp.ndarray) -> jnp.ndarray:
+    return (adj @ adj) * adj
+
+
+def triangle_count_ref(adj: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(tricount_per_edge_ref(adj)) / 6.0
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    """Materialized-softmax attention. q/k/v: (B, H, S, D)."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(D)
+    if causal:
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def segment_sum_ref(data: jnp.ndarray, ids: jnp.ndarray,
+                    n_segments: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(data, ids, n_segments)

@@ -1,0 +1,2 @@
+from . import mesh
+from . import steps

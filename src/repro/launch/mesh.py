@@ -1,0 +1,20 @@
+"""Production meshes.  Defined as functions so importing never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax initialization)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Whatever this host actually has (tests / examples)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel),
+                         ("data", "model"))

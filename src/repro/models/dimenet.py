@@ -1,0 +1,132 @@
+"""DimeNet — directional message passing with angular basis [arXiv:2003.03123].
+
+Config dimenet: n_blocks=6, d_hidden=128, n_bilinear=8, n_spherical=7,
+n_radial=6.  Messages live on DIRECTED EDGES; interaction blocks aggregate
+over triplets (k->j feeding j->i) with a 2D basis in (distance, angle) and the
+bilinear layer of the paper.  This is the "triplet gather" kernel regime: two
+gathers + one segment-sum per block — not expressible as SpMM.
+
+TPU adaptation (DESIGN.md §3): the angular basis uses Legendre polynomials
+P_l(cos angle) x sine radial basis instead of spherical Bessel roots (same
+shapes/rank; avoids host-side root finding), and triplet lists on large
+graphs are capacity-capped per edge by the data pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .gnn_common import (GraphBatch, masked_segment_sum, mlp_init, mlp_apply,
+                         radial_basis)
+
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str = "dimenet"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    d_in: int = 16
+    n_out: int = 1
+    cutoff: float = 5.0
+    dtype: Any = jnp.float32
+
+
+def _legendre(cos_t: jnp.ndarray, lmax: int) -> jnp.ndarray:
+    """P_0..P_{lmax-1}(cos_t), recurrence; returns (..., lmax)."""
+    p0 = jnp.ones_like(cos_t)
+    if lmax == 1:
+        return p0[..., None]
+    ps = [p0, cos_t]
+    for l in range(2, lmax):
+        ps.append(((2 * l - 1) * cos_t * ps[-1] - (l - 1) * ps[-2]) / l)
+    return jnp.stack(ps, axis=-1)
+
+
+def init_params(key: jax.Array, cfg: DimeNetConfig) -> Dict[str, Any]:
+    d, nb = cfg.d_hidden, cfg.n_bilinear
+    n_sbf = cfg.n_spherical * cfg.n_radial
+    keys = iter(jax.random.split(key, 8 * cfg.n_blocks + 8))
+    blocks = []
+    for _ in range(cfg.n_blocks):
+        blocks.append({
+            "w_kj": mlp_init(next(keys), [d, d], cfg.dtype),
+            "w_rbf": mlp_init(next(keys), [cfg.n_radial, d], cfg.dtype),
+            "w_sbf": mlp_init(next(keys), [n_sbf, nb], cfg.dtype),
+            "w_bil": (jax.random.normal(next(keys), (nb, d, d), jnp.float32)
+                      / np.sqrt(d * nb)).astype(cfg.dtype),
+            "mlp_ji": mlp_init(next(keys), [d, d], cfg.dtype),
+            "mlp_out": mlp_init(next(keys), [d, d, d], cfg.dtype),
+            "out_rbf": mlp_init(next(keys), [cfg.n_radial, d], cfg.dtype),
+            "out_atom": mlp_init(next(keys), [d, d, cfg.n_out], cfg.dtype),
+        })
+    return {
+        "embed_node": mlp_init(next(keys), [cfg.d_in, d], cfg.dtype),
+        "embed_edge": mlp_init(next(keys), [2 * d + cfg.n_radial, d, d],
+                               cfg.dtype),
+        "out0_rbf": mlp_init(next(keys), [cfg.n_radial, d], cfg.dtype),
+        "out0_atom": mlp_init(next(keys), [d, d, cfg.n_out], cfg.dtype),
+        "blocks": blocks,
+    }
+
+
+def forward(params: Dict[str, Any], batch: GraphBatch,
+            cfg: DimeNetConfig) -> jnp.ndarray:
+    """Graph-level outputs (n_graphs, n_out) — energies for molecules."""
+    assert batch.pos is not None and batch.triplet_kj is not None
+    x = batch.pos.astype(cfg.dtype)
+    src, dst, em = batch.edge_src, batch.edge_dst, batch.edge_mask
+    N, E = batch.n_nodes, batch.n_edges
+    rel = x[dst] - x[src]
+    dist = jnp.sqrt(jnp.maximum(jnp.sum(rel * rel, -1), 1e-12))
+    rbf = radial_basis(dist, cfg.n_radial, cfg.cutoff).astype(cfg.dtype)
+
+    # triplet geometry: angle at j between k->j and j->i
+    kj, ji, tm = batch.triplet_kj, batch.triplet_ji, batch.triplet_mask
+    v_ji = rel[ji]                       # j -> i
+    v_jk = -rel[kj]                      # j -> k  (reverse of k->j)
+    cos_t = jnp.sum(v_ji * v_jk, -1) / jnp.maximum(dist[ji] * dist[kj], 1e-9)
+    cos_t = jnp.clip(cos_t, -1.0, 1.0)
+    leg = _legendre(cos_t, cfg.n_spherical)                    # (T, n_sph)
+    rbf_kj = radial_basis(dist[kj], cfg.n_radial, cfg.cutoff)
+    sbf = (leg[:, :, None] * rbf_kj[:, None, :]).reshape(
+        kj.shape[0], -1).astype(cfg.dtype)                     # (T, n_sbf)
+
+    h = mlp_apply(params["embed_node"], batch.nodes.astype(cfg.dtype))
+    m = mlp_apply(params["embed_edge"],
+                  jnp.concatenate([h[src], h[dst], rbf], axis=-1))  # (E, d)
+    m = jnp.where(em[:, None], m, 0)
+
+    # output block 0 (from the embedding)
+    per_atom = mlp_apply(params["out0_atom"],
+                         masked_segment_sum(
+                             m * mlp_apply(params["out0_rbf"], rbf),
+                             dst, em, N))
+    for bp in params["blocks"]:
+        # directional aggregation over triplets with the bilinear layer
+        m_kj = mlp_apply(bp["w_kj"], m)[kj]
+        m_kj = m_kj * mlp_apply(bp["w_rbf"], rbf)[kj]
+        sbf_p = mlp_apply(bp["w_sbf"], sbf)                    # (T, nb)
+        inter = jnp.einsum("tb,bde,te->td", sbf_p, bp["w_bil"], m_kj)
+        agg = masked_segment_sum(inter, ji, tm, E)             # (E, d)
+        m = m + jax.nn.silu(mlp_apply(bp["mlp_ji"], m)) + agg
+        m = jax.nn.silu(mlp_apply(bp["mlp_out"], m))
+        m = jnp.where(em[:, None], m, 0)
+        per_atom = per_atom + mlp_apply(
+            bp["out_atom"],
+            masked_segment_sum(m * mlp_apply(bp["out_rbf"], rbf), dst, em, N))
+    per_atom = jnp.where(batch.node_mask[:, None], per_atom, 0)
+    return jax.ops.segment_sum(per_atom, batch.graph_id, batch.n_graphs)
+
+
+def loss_fn(params, batch: GraphBatch, targets: jnp.ndarray,
+            cfg: DimeNetConfig) -> jnp.ndarray:
+    out = forward(params, batch, cfg)
+    return jnp.mean(jnp.square(out.astype(jnp.float32)
+                               - targets.astype(jnp.float32)))

@@ -1,0 +1,199 @@
+"""MACE — higher-order equivariant message passing [arXiv:2206.07697].
+
+Config mace: n_layers=2, d_hidden=128, l_max=2, correlation_order=3, n_rbf=8.
+
+TPU adaptation (DESIGN.md §3): irreps are carried in CARTESIAN form —
+  l=0: scalars            (N, C)
+  l=1: vectors            (N, C, 3)
+  l=2: traceless symmetric rank-2 tensors (N, C, 3, 3)
+Clebsch-Gordan tensor products for l <= 2 become exact Cartesian identities
+(dot, cross, outer-traceless, matvec, double-contraction), so the model is
+*exactly* E(3)-equivariant (property-tested under random rotations) without
+Wigner matrices.  The Atomic Cluster Expansion (correlation order 3) is the
+set of degree-<=3 invariant/covariant polynomial contractions of the
+aggregated one-particle basis A — the same structure MACE builds with
+generalized CG contractions, expressed over Cartesian tensors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .gnn_common import (GraphBatch, mlp_init, mlp_apply, radial_basis)
+
+
+@dataclasses.dataclass(frozen=True)
+class MACEConfig:
+    name: str = "mace"
+    n_layers: int = 2
+    d_hidden: int = 128        # channels C per irrep
+    l_max: int = 2
+    correlation_order: int = 3
+    n_rbf: int = 8
+    d_in: int = 16
+    n_out: int = 1
+    cutoff: float = 5.0
+    dtype: Any = jnp.float32
+
+    @property
+    def n_paths(self) -> int:
+        return 10  # edge-basis paths below
+
+
+def _sym_traceless(t: jnp.ndarray) -> jnp.ndarray:
+    """Project (.., 3, 3) onto the l=2 irrep: symmetric, trace-free."""
+    s = 0.5 * (t + jnp.swapaxes(t, -1, -2))
+    tr = jnp.trace(s, axis1=-2, axis2=-1)[..., None, None]
+    eye = jnp.eye(3, dtype=t.dtype)
+    return s - tr * eye / 3.0
+
+
+def _mix(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Channel mixing (C_out, C_in) applied on axis 1 of (N, C_in, ...)."""
+    return jnp.einsum("oc,nc...->no...", w, x)
+
+
+def init_params(key: jax.Array, cfg: MACEConfig) -> Dict[str, Any]:
+    C = cfg.d_hidden
+    keys = iter(jax.random.split(key, 16 * cfg.n_layers + 4))
+
+    def mixer(k):
+        return (jax.random.normal(k, (C, C), jnp.float32)
+                / np.sqrt(C)).astype(cfg.dtype)
+
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append({
+            # radial MLP: per-path, per-channel weights R(r)
+            "radial": mlp_init(next(keys), [cfg.n_rbf, 64,
+                                            cfg.n_paths * C], cfg.dtype),
+            # per-path channel mixers for message construction
+            "mix_s": mixer(next(keys)), "mix_v": mixer(next(keys)),
+            "mix_t": mixer(next(keys)),
+            # ACE product-basis mixing weights (one per contraction path)
+            "b0": (jax.random.normal(next(keys), (8, C), jnp.float32)
+                   * 0.3).astype(cfg.dtype),
+            "b1": (jax.random.normal(next(keys), (5, C), jnp.float32)
+                   * 0.3).astype(cfg.dtype),
+            "b2": (jax.random.normal(next(keys), (5, C), jnp.float32)
+                   * 0.3).astype(cfg.dtype),
+            "upd_s": mixer(next(keys)), "upd_v": mixer(next(keys)),
+            "upd_t": mixer(next(keys)),
+            "res_s": mixer(next(keys)), "res_v": mixer(next(keys)),
+            "res_t": mixer(next(keys)),
+            "gate": mlp_init(next(keys), [C, 2 * C], cfg.dtype),
+        })
+    return {
+        "encode": mlp_init(next(keys), [cfg.d_in, C], cfg.dtype),
+        "layers": layers,
+        "readout": mlp_init(next(keys), [C, C, cfg.n_out], cfg.dtype),
+    }
+
+
+def _edge_basis(s_j, v_j, t_j, rhat, R):
+    """One-particle basis phi: covariant products of neighbor features with
+    Y_0(r)=1, Y_1(r)=rhat, Y_2(r)=rhat rhat^T - I/3.  R: (E, n_paths, C)."""
+    eye = jnp.eye(3, dtype=s_j.dtype)
+    y2 = rhat[:, None, :] * rhat[:, :, None] - eye / 3.0       # (E, 3, 3)
+    y2 = y2[:, None]                                           # (E, 1, 3, 3)
+    rh = rhat[:, None]                                         # (E, 1, 3)
+    # scalar outputs
+    a0 = (R[:, 0] * s_j,                                       # s * Y0
+          R[:, 1] * jnp.einsum("eck,ek->ec", v_j, rhat),       # v . rhat
+          R[:, 2] * jnp.einsum("ecij,eij->ec", t_j,
+                               y2[:, 0]))                      # t : Y2
+    # vector outputs
+    a1 = (R[:, 3, :, None] * (s_j[..., None] * rh),            # s * Y1
+          R[:, 4, :, None] * v_j,                              # v * Y0
+          R[:, 5, :, None] * jnp.cross(v_j, jnp.broadcast_to(
+              rh, v_j.shape)),                                 # v x rhat
+          R[:, 6, :, None] * jnp.einsum("ecij,ej->eci", t_j, rhat))
+    # tensor outputs
+    a2 = (R[:, 7, :, None, None] * (s_j[..., None, None] * y2),
+          R[:, 8, :, None, None] * _sym_traceless(
+              v_j[..., :, None] * rh[..., None, :]),           # v (x) rhat
+          R[:, 9, :, None, None] * t_j)                        # t * Y0
+    return sum(a0[1:], a0[0]), sum(a1[1:], a1[0]), sum(a2[1:], a2[0])
+
+
+def _ace_products(A0, A1, A2, lp):
+    """Correlation-order <= 3 contractions of the aggregated basis A."""
+    dot = lambda a, b: jnp.einsum("nci,nci->nc", a, b)
+    ddot = lambda a, b: jnp.einsum("ncij,ncij->nc", a, b)
+    matvec = lambda t, v: jnp.einsum("ncij,ncj->nci", t, v)
+    # invariants (order 1, 2, 3)
+    b0 = (lp["b0"][0] * A0
+          + lp["b0"][1] * A0 * A0
+          + lp["b0"][2] * dot(A1, A1)
+          + lp["b0"][3] * ddot(A2, A2)
+          + lp["b0"][4] * A0 * A0 * A0
+          + lp["b0"][5] * A0 * dot(A1, A1)
+          + lp["b0"][6] * dot(A1, matvec(A2, A1))
+          + lp["b0"][7] * A0 * ddot(A2, A2))
+    # covariant l=1 (order <= 3)
+    b1 = (lp["b1"][0][:, None] * A1
+          + lp["b1"][1][:, None] * (A0[..., None] * A1)
+          + lp["b1"][2][:, None] * matvec(A2, A1)
+          + lp["b1"][3][:, None] * (A0[..., None] ** 2 * A1)
+          + lp["b1"][4][:, None] * (A0[..., None] * matvec(A2, A1)))
+    # covariant l=2 (order <= 3)
+    outer11 = _sym_traceless(A1[..., :, None] * A1[..., None, :])
+    b2 = (lp["b2"][0][:, None, None] * A2
+          + lp["b2"][1][:, None, None] * (A0[..., None, None] * A2)
+          + lp["b2"][2][:, None, None] * outer11
+          + lp["b2"][3][:, None, None] * (A0[..., None, None] ** 2 * A2)
+          + lp["b2"][4][:, None, None] * _sym_traceless(
+              jnp.einsum("ncik,nckj->ncij", A2, A2)))
+    return b0, b1, b2
+
+
+def forward(params: Dict[str, Any], batch: GraphBatch, cfg: MACEConfig
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Returns (graph outputs, final node irreps {s, v, t})."""
+    assert batch.pos is not None
+    x = batch.pos.astype(cfg.dtype)
+    src, dst, em = batch.edge_src, batch.edge_dst, batch.edge_mask
+    N, C = batch.n_nodes, cfg.d_hidden
+    rel = x[dst] - x[src]
+    dist = jnp.sqrt(jnp.maximum(jnp.sum(rel * rel, -1), 1e-12))
+    rhat = rel / dist[:, None]
+    rbf = radial_basis(dist, cfg.n_rbf, cfg.cutoff).astype(cfg.dtype)
+
+    s = mlp_apply(params["encode"], batch.nodes.astype(cfg.dtype))  # (N, C)
+    v = jnp.zeros((N, C, 3), cfg.dtype)
+    t = jnp.zeros((N, C, 3, 3), cfg.dtype)
+    energy = 0.0
+    for lp in params["layers"]:
+        R = mlp_apply(lp["radial"], rbf).reshape(-1, cfg.n_paths, C)
+        R = R * em[:, None, None]
+        s_j = _mix(lp["mix_s"], s)[src]
+        v_j = _mix(lp["mix_v"], v)[src]
+        t_j = _mix(lp["mix_t"], t)[src]
+        p0, p1, p2 = _edge_basis(s_j, v_j, t_j, rhat, R)
+        A0 = jax.ops.segment_sum(p0, dst, N)
+        A1 = jax.ops.segment_sum(p1, dst, N)
+        A2 = jax.ops.segment_sum(p2, dst, N)
+        B0, B1, B2 = _ace_products(A0, A1, A2, lp)
+        # gated residual update (gates are invariant functions of B0)
+        g = mlp_apply(lp["gate"], B0)
+        g1, g2 = jnp.split(jax.nn.sigmoid(g), 2, axis=-1)
+        s = _mix(lp["res_s"], s) + _mix(lp["upd_s"], B0)
+        v = _mix(lp["res_v"], v) + g1[..., None] * _mix(lp["upd_v"], B1)
+        t = _mix(lp["res_t"], t) + g2[..., None, None] * _mix(lp["upd_t"], B2)
+        s = jnp.where(batch.node_mask[:, None], s, 0)
+        v = jnp.where(batch.node_mask[:, None, None], v, 0)
+        t = jnp.where(batch.node_mask[:, None, None, None], t, 0)
+        energy = energy + mlp_apply(params["readout"], s)
+    pooled = jax.ops.segment_sum(energy, batch.graph_id, batch.n_graphs)
+    return pooled, {"s": s, "v": v, "t": t}
+
+
+def loss_fn(params, batch: GraphBatch, targets: jnp.ndarray,
+            cfg: MACEConfig) -> jnp.ndarray:
+    out, _ = forward(params, batch, cfg)
+    return jnp.mean(jnp.square(out.astype(jnp.float32)
+                               - targets.astype(jnp.float32)))

@@ -1,0 +1,485 @@
+"""Decoder-only transformer family: GQA / MLA attention, SwiGLU / MoE FFN.
+
+Design points (all serve the multi-pod dry-run and the roofline):
+  * `lax.scan` over layers with stacked params — one layer body in the HLO,
+    so 40-layer × 512-device programs lower and compile quickly.
+  * Attention is an online-softmax (flash-style) scan over KV chunks — the
+    (S, S) score matrix is never materialized, so prefill_32k lowers with
+    honest memory.  Decode (S_q small) runs the same code path.
+  * MoE uses sort-based capacity dispatch: top-k routing, tokens grouped by
+    expert via argsort, per-expert matmuls under a scan.  FLOPs are
+    proportional to *active* parameters (capacity-dropped), never E× dense.
+  * MLA (DeepSeek-V2) compresses KV through a LoRA bottleneck; the KV cache
+    stores the compressed latent (kv_lora_rank + rope dims per token).
+  * Everything is pure-functional pytrees; sharding lives in
+    `repro.distributed.sharding` as PartitionSpec pytrees mirroring params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0          # shared (always-on) experts, DeepSeek-style
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    rope_head_dim: int = 64    # decoupled RoPE key dims (shared across heads)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: Optional[int] = None
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16
+    attn_chunk: int = 1024     # KV chunk for the online-softmax scan
+    remat: bool = True
+    tie_embeddings: bool = False
+    # cost-accounting mode: fully unroll the layer/attention scans so XLA's
+    # HloCostAnalysis (which counts while bodies ONCE) reports true totals.
+    # Identical math; used by the dry-run for the roofline terms.
+    cost_unroll: bool = False
+    # sharding HINT consumed by the launcher's rule tables: shard MoE
+    # experts over the data axis (EP-over-data + TP-over-model within each
+    # expert) instead of the default experts-over-model
+    moe_ep_data: bool = False
+    # activation sharding constraints: hashable tuple of (name, PartitionSpec)
+    # set by the launcher.  Names: act_q, act_kv, act_attn_out, act_resid,
+    # act_moe_disp, act_logits.  None entries / missing names = GSPMD's choice.
+    act_specs: Any = None
+
+    def act_spec(self, name: str):
+        if not self.act_specs:
+            return None
+        return dict(self.act_specs).get(name)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Total parameters (for 6ND MODEL_FLOPS accounting)."""
+        d, h = self.d_model, self.head_dim
+        if self.mla is not None:
+            r, pr = self.mla.kv_lora_rank, self.mla.rope_head_dim
+            attn = d * (self.n_heads * h) + d * (r + pr) \
+                + r * (self.n_heads * 2 * h) + self.n_heads * h * d
+        else:
+            attn = d * (self.n_heads + 2 * self.n_kv_heads) * h \
+                + self.n_heads * h * d
+        if self.moe is not None:
+            ff = self.moe.d_ff_expert
+            moe = self.moe.n_experts * 3 * d * ff + d * self.moe.n_experts \
+                + self.moe.n_shared * 3 * d * ff
+            per_layer = attn + moe + 2 * d
+        else:
+            per_layer = attn + 3 * d * self.d_ff + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k + shared experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        ff = self.moe.d_ff_expert
+        attn = self._attn_params()
+        act = attn + (self.moe.top_k + self.moe.n_shared) * 3 * d * ff \
+            + d * self.moe.n_experts + 2 * d
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * act + emb + d
+
+    def _attn_params(self) -> int:
+        d, h = self.d_model, self.head_dim
+        if self.mla is not None:
+            r, pr = self.mla.kv_lora_rank, self.mla.rope_head_dim
+            return d * (self.n_heads * h) + d * (r + pr) \
+                + r * (self.n_heads * 2 * h) + self.n_heads * h * d
+        return d * (self.n_heads + 2 * self.n_kv_heads) * h + self.n_heads * h * d
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def _constrain(x: jnp.ndarray, spec) -> jnp.ndarray:
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def rope_angles(positions: jnp.ndarray, dim: int, theta: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) broadcast over heads."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    c, s = cos[:, :, None, :], sin[:, :, None, :]
+    o1 = x1 * c - x2 * s
+    o2 = x2 * c + x1 * s
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def online_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     q_pos: jnp.ndarray, k_valid_len: jnp.ndarray,
+                     causal: bool, chunk: int,
+                     unroll: bool = False) -> jnp.ndarray:
+    """Flash-style attention: scan over KV chunks with running (max, sum).
+
+    q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D).  GQA: H % Hkv == 0 — kv heads
+    are repeated by reshape-grouping (no materialized repeat).
+    q_pos: (B, Sq) absolute positions for the causal mask.
+    k_valid_len: (B,) number of valid cache slots (for padded decode caches).
+    Returns (B, Sq, H, D).
+
+    Perf notes (EXPERIMENTS.md §Perf, minicpm/4-5): scores come straight
+    from a bf16 x bf16 dot_general with f32 accumulation (MXU-native; no
+    operand upcasts), masking is one additive (B, Sq, chunk) bias, the
+    internal layout is (B, Hkv, G, Sq, ...) so no per-chunk transposes, and
+    probabilities re-enter the PV matmul in bf16.
+    """
+    B, Sq, H, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = jnp.float32(1.0 / np.sqrt(D))
+    # one transpose in: (B, Sq, Hkv, G, D) -> (B, Hkv, G, Sq, D)
+    qt = jnp.transpose(q.reshape(B, Sq, Hkv, G, D), (0, 2, 3, 1, 4))
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, Hkv, D)
+    vc = v.reshape(B, n_chunks, chunk, Hkv, D)
+    NEG = -1e30  # finite -inf sentinel (fully-masked rows = pad queries only)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kb, vb, c_idx = inp            # (B, chunk, Hkv, D) x2, scalar
+        kpos = c_idx * chunk + jnp.arange(chunk)          # (chunk,)
+        mask = kpos[None, None, :] < k_valid_len[:, None, None]  # (B,1,chunk)
+        if causal:
+            mask = mask & (kpos[None, None, :] <= q_pos[:, :, None])
+        bias = jnp.where(mask, 0.0, NEG)                  # (B, Sq, chunk)
+        # scores (B, Hkv, G, Sq, chunk): bf16 x bf16 -> f32 on the MXU
+        s = jax.lax.dot_general(
+            qt, kb, (((4,), (3,)), ((0, 1), (0, 2))),
+            preferred_element_type=jnp.float32)
+        s = s * scale + bias[:, None, None, :, :]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        # (B, Hkv, G, Sq, chunk) x (B, chunk, Hkv, D) -> (B, Hkv, G, Sq, D)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), vb, (((4,), (1,)), ((0, 1), (0, 2))),
+            preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    idxs = jnp.arange(n_chunks)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (jnp.moveaxis(kc, 1, 0),
+                                   jnp.moveaxis(vc, 1, 0), idxs),
+                                  unroll=n_chunks if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    # one transpose out: (B, Hkv, G, Sq, D) -> (B, Sq, H, D)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(B, Sq, H, D)
+    return out.astype(q.dtype)
+
+
+def swiglu(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray,
+           w3: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+# ---------------------------------------------------------------------------
+# MoE: top-k routing + sort-based capacity dispatch
+# ---------------------------------------------------------------------------
+
+def moe_block(x: jnp.ndarray, params: Dict[str, jnp.ndarray],
+              cfg: MoEConfig, disp_spec=None) -> jnp.ndarray:
+    """x: (T, d) flat tokens -> (T, d). Capacity-dropped sorted dispatch."""
+    T, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    cap = int(np.ceil(T * K / E * cfg.capacity_factor))
+    logits = (x.astype(jnp.float32) @ params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (T, E)
+    gate, eidx = jax.lax.top_k(probs, K)                        # (T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    # flatten assignments, group by expert via one stable sort
+    flat_e = eidx.reshape(-1)                                   # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    flat_g = gate.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    e_s, t_s, g_s = flat_e[order], flat_t[order], flat_g[order]
+    # position within expert group; drop tokens beyond capacity
+    ones = jnp.ones_like(e_s)
+    pos_in_e = jax.lax.associative_scan(jnp.add, ones) - 1
+    seg_start = jnp.concatenate([jnp.zeros((1,), e_s.dtype), e_s[:-1]]) != e_s
+    run_start = jnp.where(seg_start, pos_in_e, 0)
+    run_start = jax.lax.associative_scan(jnp.maximum, run_start)
+    slot = pos_in_e - run_start                                 # rank in group
+    keep = slot < cap
+    slot = jnp.where(keep, slot, cap - 1)
+    # gather tokens into the (E, cap, d) buffer expert-by-expert via scan
+    buf_idx = e_s * cap + slot
+    dispatch = jnp.zeros((E * cap, d), x.dtype)
+    dispatch = dispatch.at[buf_idx].add(jnp.where(keep[:, None], x[t_s], 0))
+    dispatch = dispatch.reshape(E, cap, d)
+    if disp_spec is not None:
+        dispatch = jax.lax.with_sharding_constraint(dispatch, disp_spec)
+
+    def expert(h, w):
+        return jax.nn.silu(h @ w["w1"]) * (h @ w["w3"]) @ w["w2"]
+
+    out_buf = jax.vmap(expert)(dispatch, {
+        "w1": params["w1"], "w2": params["w2"], "w3": params["w3"]})
+    out_flat = out_buf.reshape(E * cap, d)
+    contrib = out_flat[buf_idx] * (g_s * keep)[:, None].astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[t_s].add(contrib)
+    if cfg.n_shared:
+        y = y + swiglu(x, params["sw1"], params["sw2"], params["sw3"])
+    return y
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+def _attn(x, params, cfg: TransformerConfig, positions, cache=None,
+          cache_len=None):
+    """Self-attention (GQA or MLA). Returns (out, new_cache_kv)."""
+    B, S, d = x.shape
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.mla is not None:
+        r, pr = cfg.mla.kv_lora_rank, cfg.mla.rope_head_dim
+        q = (x @ params["wq"]).reshape(B, S, H, D)
+        latent = x @ params["w_dkv"]                       # (B, S, r)
+        k_rope = (x @ params["w_kr"]).reshape(B, S, 1, pr)
+        cos, sin = rope_angles(positions, pr, cfg.rope_theta)
+        k_rope = apply_rope(k_rope, cos, sin)
+        q_rope = apply_rope(q[..., :pr].reshape(B, S, H, pr), cos, sin)
+        if cache is not None:
+            lat_c, kr_c = cache                            # (B, Sc, r), (B, Sc, 1, pr)
+            off = cache_len
+            lat_c = jax.lax.dynamic_update_slice(lat_c, latent, (0, off, 0))
+            kr_c = jax.lax.dynamic_update_slice(kr_c, k_rope, (0, off, 0, 0))
+            latent, k_rope = lat_c, kr_c
+        Sk = latent.shape[1]
+        k_nope = (latent @ params["w_uk"]).reshape(B, Sk, H, D - pr)
+        v = (latent @ params["w_uv"]).reshape(B, Sk, H, D)
+        k = jnp.concatenate(
+            [jnp.broadcast_to(k_rope, (B, Sk, H, pr)), k_nope], axis=-1)
+        q = jnp.concatenate([q_rope, q[..., pr:]], axis=-1)
+        kv_heads_eff = H
+        new_cache = (latent, k_rope) if cache is not None else None
+    else:
+        q = (x @ params["wq"]).reshape(B, S, H, D)
+        k = (x @ params["wk"]).reshape(B, S, Hkv, D)
+        v = (x @ params["wv"]).reshape(B, S, Hkv, D)
+        cos, sin = rope_angles(positions, D, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        if cache is not None:
+            k_c, v_c = cache                               # (B, Sc, Hkv, D)
+            off = cache_len
+            k = jax.lax.dynamic_update_slice(k_c, k, (0, off, 0, 0))
+            v = jax.lax.dynamic_update_slice(v_c, v, (0, off, 0, 0))
+        new_cache = (k, v) if cache is not None else None
+        kv_heads_eff = Hkv
+    valid = (cache_len + S) * jnp.ones((B,), jnp.int32) if cache is not None \
+        else jnp.full((B,), k.shape[1], jnp.int32)
+    q = _constrain(q, cfg.act_spec("act_q"))
+    k = _constrain(k, cfg.act_spec("act_kv"))
+    v = _constrain(v, cfg.act_spec("act_kv"))
+    out = online_attention(q, k, v, positions, valid, causal=True,
+                           chunk=cfg.attn_chunk, unroll=cfg.cost_unroll)
+    out = _constrain(out, cfg.act_spec("act_q"))
+    out = out.reshape(B, S, H * D) @ params["wo"]
+    return out, new_cache
+
+
+def _layer(x, params, cfg: TransformerConfig, positions, cache=None,
+           cache_len=None):
+    h, new_cache = _attn(rmsnorm(x, params["ln1"], cfg.norm_eps), params,
+                         cfg, positions, cache, cache_len)
+    x = _constrain(x + h, cfg.act_spec("act_resid"))
+    z = rmsnorm(x, params["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        B, S, d = z.shape
+        y = moe_block(z.reshape(B * S, d), params, cfg.moe,
+                      disp_spec=cfg.act_spec("act_moe_disp")).reshape(B, S, d)
+    else:
+        y = swiglu(z, params["w1"], params["w2"], params["w3"])
+    return _constrain(x + y, cfg.act_spec("act_resid")), new_cache
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _dense(key, shape, dtype, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+def init_params(key: jax.Array, cfg: TransformerConfig) -> Dict[str, Any]:
+    """Stacked-layer params: every per-layer array has leading dim n_layers."""
+    d, H, Hkv, D = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    L, dt = cfg.n_layers, cfg.dtype
+    keys = iter(jax.random.split(key, 64))
+    layer: Dict[str, jnp.ndarray] = {
+        "ln1": jnp.ones((L, d), dt),
+        "ln2": jnp.ones((L, d), dt),
+        "wo": _dense(next(keys), (L, H * D, d), dt),
+    }
+    if cfg.mla is not None:
+        r, pr = cfg.mla.kv_lora_rank, cfg.mla.rope_head_dim
+        layer.update(
+            wq=_dense(next(keys), (L, d, H * D), dt),
+            w_dkv=_dense(next(keys), (L, d, r), dt),
+            w_kr=_dense(next(keys), (L, d, pr), dt),
+            w_uk=_dense(next(keys), (L, r, H * (D - pr)), dt),
+            w_uv=_dense(next(keys), (L, r, H * D), dt),
+        )
+    else:
+        layer.update(
+            wq=_dense(next(keys), (L, d, H * D), dt),
+            wk=_dense(next(keys), (L, d, Hkv * D), dt),
+            wv=_dense(next(keys), (L, d, Hkv * D), dt),
+        )
+    if cfg.moe is not None:
+        E, f = cfg.moe.n_experts, cfg.moe.d_ff_expert
+        layer.update(
+            router=_dense(next(keys), (L, d, E), jnp.float32),
+            w1=_dense(next(keys), (L, E, d, f), dt),
+            w2=_dense(next(keys), (L, E, f, d), dt),
+            w3=_dense(next(keys), (L, E, d, f), dt),
+        )
+        if cfg.moe.n_shared:
+            fs = f * cfg.moe.n_shared
+            layer.update(
+                sw1=_dense(next(keys), (L, d, fs), dt),
+                sw2=_dense(next(keys), (L, fs, d), dt),
+                sw3=_dense(next(keys), (L, d, fs), dt),
+            )
+    else:
+        layer.update(
+            w1=_dense(next(keys), (L, d, cfg.d_ff), dt),
+            w2=_dense(next(keys), (L, cfg.d_ff, d), dt),
+            w3=_dense(next(keys), (L, d, cfg.d_ff), dt),
+        )
+    params: Dict[str, Any] = {
+        "embed": _dense(next(keys), (cfg.vocab, d), dt, scale=1.0),
+        "ln_f": jnp.ones((d,), dt),
+        "layers": layer,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _dense(next(keys), (d, cfg.vocab), dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward / loss / decode
+# ---------------------------------------------------------------------------
+
+def forward(params: Dict[str, Any], tokens: jnp.ndarray,
+            cfg: TransformerConfig) -> jnp.ndarray:
+    """tokens (B, S) -> logits (B, S, vocab)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, lp):
+        y, _ = _layer(x, lp, cfg, positions)
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"],
+                        unroll=cfg.n_layers if cfg.cost_unroll else 1)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    unemb = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return x @ unemb
+
+
+def loss_fn(params: Dict[str, Any], tokens: jnp.ndarray,
+            labels: jnp.ndarray, cfg: TransformerConfig) -> jnp.ndarray:
+    logits = forward(params, tokens, cfg).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int,
+               dtype=None) -> Any:
+    """Stacked KV cache, one leading layer axis (scan-carried)."""
+    dt = dtype or cfg.dtype
+    L, Hkv, D = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    if cfg.mla is not None:
+        r, pr = cfg.mla.kv_lora_rank, cfg.mla.rope_head_dim
+        return (jnp.zeros((L, batch, max_len, r), dt),
+                jnp.zeros((L, batch, max_len, 1, pr), dt))
+    return (jnp.zeros((L, batch, max_len, Hkv, D), dt),
+            jnp.zeros((L, batch, max_len, Hkv, D), dt))
+
+
+def decode_step(params: Dict[str, Any], tokens: jnp.ndarray,
+                cache: Any, cache_len: jnp.ndarray,
+                cfg: TransformerConfig):
+    """One decode step: tokens (B, S_new) appended at cache_len.
+
+    Returns (logits (B, S_new, vocab), new_cache, new_len).
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    positions = cache_len + jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(x, inp):
+        lp, c = inp
+        y, new_c = _layer(x, lp, cfg, positions, cache=c, cache_len=cache_len)
+        return y, new_c
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache),
+                                unroll=cfg.n_layers if cfg.cost_unroll else 1)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    unemb = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return x @ unemb, new_cache, cache_len + S

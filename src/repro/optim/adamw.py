@@ -1,0 +1,183 @@
+"""AdamW + schedules + gradient utilities (self-contained, no optax).
+
+Includes the distributed-optimization tricks the framework exposes:
+  * global-norm gradient clipping,
+  * cosine and WSD (warmup-stable-decay, MiniCPM [arXiv:2404.06395]) schedules,
+  * PowerSGD-style low-rank gradient compression with error feedback
+    (`compress_grads` / `decompress_grads`) for bandwidth-bound meshes,
+  * microbatched gradient accumulation via `lax.scan` (see train loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"       # "constant" | "cosine" | "wsd"
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1        # WSD: fraction of steps spent decaying
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        frac = jnp.ones_like(s)
+    elif cfg.schedule == "cosine":
+        t = jnp.clip((s - cfg.warmup_steps)
+                     / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        # warmup -> stable plateau -> short linear decay (MiniCPM)
+        decay_steps = int(cfg.total_steps * cfg.decay_frac)
+        stable_end = cfg.total_steps - decay_steps
+        t = jnp.clip((s - stable_end) / max(decay_steps, 1), 0.0, 1.0)
+        frac = 1.0 - (1.0 - cfg.min_lr_frac) * t
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.lr * warm * frac
+
+
+def init_state(params: Any) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))),
+                      tree)
+    return jnp.sqrt(sum(jax.tree.leaves(sq)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jnp.ndarray]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def apply_updates(params: Any, grads: Any, state: AdamWState,
+                  cfg: AdamWConfig) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+    if cfg.grad_clip > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gnorm = global_norm(grads)
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g32
+        nu = b2 * nu + (1 - b2) * jnp.square(g32)
+        mhat = mu / bc1
+        nhat = nu / bc2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+    out = [upd(p, g, m, n) for p, g, m, n
+           in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step=step, mu=new_mu, nu=new_nu), metrics
+
+
+# ---------------------------------------------------------------------------
+# PowerSGD-style low-rank gradient compression with error feedback
+# ---------------------------------------------------------------------------
+
+class CompressionState(NamedTuple):
+    error: Any   # error-feedback residuals, same structure as params
+    q: Any       # per-matrix right factors (warm-started power iteration)
+
+
+def init_compression(params: Any, rank: int, key: jax.Array) -> CompressionState:
+    flat, tdef = jax.tree.flatten(params)
+    keys = jax.random.split(key, len(flat))
+    errs, qs = [], []
+    for p, k in zip(flat, keys):
+        errs.append(jnp.zeros(p.shape, jnp.float32))
+        if p.ndim >= 2:
+            n = int(np.prod(p.shape[1:]))
+            qs.append(jax.random.normal(k, (n, rank), jnp.float32))
+        else:
+            qs.append(None)
+    return CompressionState(error=tdef.unflatten(errs), q=tdef.unflatten(qs))
+
+
+def compress_grads(grads: Any, cstate: CompressionState, rank: int):
+    """One power-iteration low-rank factorization per matrix gradient.
+
+    Returns (payload to all-reduce, new state).  Payload for a matrix of
+    shape (m, n) is (P (m, r), Q (n, r)) — r(m+n) instead of mn words on the
+    wire; 1-D params ride along uncompressed.  Error feedback accumulates
+    what the low-rank projection dropped.
+    """
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(cstate.error)
+    # q holds None for 1-D params: flatten with None as a leaf
+    flat_q = jax.tree.flatten(cstate.q, is_leaf=lambda x: x is None)[0]
+    payload, new_e, new_q = [], [], []
+    for g, e, q in zip(flat_g, flat_e, flat_q):
+        g32 = g.astype(jnp.float32) + e
+        if g.ndim >= 2 and q is not None:
+            m = g32.reshape(g32.shape[0], -1)
+            p = m @ q                                   # (m, r)
+            p, _ = jnp.linalg.qr(p)
+            q_new = m.T @ p                             # (n, r)
+            approx = (p @ q_new.T).reshape(g.shape)
+            payload.append((p, q_new))
+            new_e.append(g32 - approx)
+            new_q.append(q_new)
+        else:
+            payload.append(g32)
+            new_e.append(jnp.zeros_like(g32))
+            new_q.append(None)
+    return (tdef.unflatten(payload),
+            CompressionState(error=tdef.unflatten(new_e),
+                             q=tdef.unflatten(new_q)))
+
+
+def decompress_grads(payload: Any, like: Any) -> Any:
+    flat_p, tdef = jax.tree.flatten(payload,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+    flat_l = jax.tree.leaves(like)
+    out = []
+    for pay, l in zip(flat_p, flat_l):
+        if isinstance(pay, tuple):
+            p, q = pay
+            out.append((p @ q.T).reshape(l.shape).astype(l.dtype))
+        else:
+            out.append(pay.astype(l.dtype))
+    return tdef.unflatten(out)

@@ -1,0 +1,145 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# tricount
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,p,tile", [
+    (64, 0.2, 32), (100, 0.1, 32), (128, 0.3, 64), (200, 0.05, 128),
+    (256, 0.15, 128),
+])
+def test_tricount_matches_ref(n, p, tile):
+    rng = np.random.default_rng(n)
+    a = (rng.random((n, n)) < p).astype(np.float32)
+    a = np.triu(a, 1)
+    a = a + a.T
+    got = ops.tricount(jnp.asarray(a), tile=tile)
+    want = ref.tricount_per_edge_ref(jnp.asarray(a))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0)
+
+
+def test_tricount_agrees_with_clique_counter():
+    """Kernel vs the repo's own 3-clique enumerator."""
+    from repro.graph import generators, count_cliques
+    g = generators.erdos_renyi(80, 0.15, seed=7)
+    n = g.n
+    a = np.zeros((n, n), np.float32)
+    e = np.asarray(g.edges)
+    a[e[:, 0], e[:, 1]] = 1
+    a[e[:, 1], e[:, 0]] = 1
+    per_edge = ops.tricount(jnp.asarray(a))
+    assert int(np.round(float(jnp.sum(per_edge)) / 6)) == count_cliques(g, 3)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,Sq,Sk,D,bq,bk", [
+    (1, 1, 64, 64, 32, 32, 32),
+    (2, 3, 128, 128, 64, 64, 64),
+    (1, 2, 96, 96, 64, 32, 32),      # padding path (96 % 64 != 0)
+    (2, 1, 128, 128, 128, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(B, H, Sq, Sk, D, bq, bk, dtype):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((B, H, Sq, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, H, Sk, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, H, Sk, D)), dtype)
+    got = ops.attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    want = ref.attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_flash_attention_noncausal():
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.float32)
+    got = ops.attention(q, k, v, causal=False, block_q=32, block_k=32)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_matches_model_online_attention():
+    """The model's scan-based online attention == the Pallas kernel."""
+    from repro.models.transformer import online_attention
+    rng = np.random.default_rng(2)
+    B, S, H, D = 2, 64, 4, 32
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    valid = jnp.full((B,), S, jnp.int32)
+    a = online_attention(q, k, v, pos, valid, causal=True, chunk=16)
+    b = ops.attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                      v.transpose(0, 2, 1, 3), causal=True,
+                      block_q=32, block_k=32).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5,
+                               rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# segment sum
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("E,d,N,bn,ce", [
+    (512, 16, 100, 32, 64),
+    (1000, 32, 300, 64, 128),
+    (2048, 8, 64, 64, 256),       # few segments, long runs
+    (300, 64, 1000, 128, 128),    # many empty segments
+])
+def test_segment_sum_matches_ref(E, d, N, bn, ce):
+    rng = np.random.default_rng(E + N)
+    ids = np.sort(rng.integers(0, N, E)).astype(np.int32)
+    data = rng.standard_normal((E, d)).astype(np.float32)
+    got = ops.segment_sum(jnp.asarray(data), jnp.asarray(ids), N,
+                          block_n=bn, chunk_e=ce)
+    want = ref.segment_sum_ref(jnp.asarray(data), jnp.asarray(ids), N)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_segment_sum_skewed_degrees():
+    """Power-law-ish segment sizes (one giant segment)."""
+    rng = np.random.default_rng(5)
+    E, d, N = 1024, 16, 128
+    ids = np.concatenate([np.zeros(700, np.int32),
+                          np.sort(rng.integers(1, N, E - 700)).astype(np.int32)])
+    data = rng.standard_normal((E, d)).astype(np.float32)
+    got = ops.segment_sum(jnp.asarray(data), jnp.asarray(ids), N,
+                          block_n=32, chunk_e=64)
+    want = ref.segment_sum_ref(jnp.asarray(data), jnp.asarray(ids), N)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3,
+                               rtol=1e-3)
+
+
+def test_segment_sum_hypothesis():
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 400).map(lambda e: e),
+           st.integers(1, 50), st.integers(2, 200), st.integers(0, 10_000))
+    def inner(E, d, N, seed):
+        rng = np.random.default_rng(seed)
+        ids = np.sort(rng.integers(0, N, E)).astype(np.int32)
+        data = rng.standard_normal((E, d)).astype(np.float32)
+        got = ops.segment_sum(jnp.asarray(data), jnp.asarray(ids), N,
+                              block_n=32, chunk_e=64)
+        want = ref.segment_sum_ref(jnp.asarray(data), jnp.asarray(ids), N)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-3, rtol=1e-3)
+
+    inner()

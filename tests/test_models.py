@@ -1,0 +1,287 @@
+"""Model-zoo correctness: decode consistency, equivariance, MoE invariants."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.models import (transformer as T, gin, egnn, dimenet, mace, din,
+                          TransformerConfig, MoEConfig, MLAConfig,
+                          make_batch_from_arrays, build_triplets)
+from repro.data import synthetic_molecules
+
+
+def _gqa_cfg(**kw):
+    base = dict(name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                d_ff=64, vocab=53, attn_chunk=8, dtype=jnp.float32,
+                remat=False)
+    base.update(kw)
+    return TransformerConfig(**base)
+
+
+@pytest.mark.parametrize("variant", ["gqa", "mha", "mla", "moe", "moe_mla"])
+def test_decode_matches_forward(variant):
+    kw = {}
+    if variant == "mha":
+        kw = dict(n_kv_heads=4)
+    if variant == "mla":
+        kw = dict(n_kv_heads=4, mla=MLAConfig(kv_lora_rank=12,
+                                              rope_head_dim=4))
+    if variant == "moe":
+        kw = dict(moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=32,
+                                n_shared=1, capacity_factor=4.0))
+    if variant == "moe_mla":
+        kw = dict(n_kv_heads=4,
+                  moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=32,
+                                n_shared=1, capacity_factor=4.0),
+                  mla=MLAConfig(kv_lora_rank=12, rope_head_dim=4))
+    cfg = _gqa_cfg(**kw)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 0, cfg.vocab)
+    full = T.forward(params, toks, cfg)
+    cache = T.init_cache(cfg, 2, 12, dtype=jnp.float32)
+    clen = jnp.int32(0)
+    outs = []
+    for i in range(10):
+        lg, cache, clen = T.decode_step(params, toks[:, i:i + 1], cache,
+                                        clen, cfg)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=3e-4,
+                               rtol=3e-4)
+
+
+def test_causality():
+    """Changing future tokens must not change past logits."""
+    cfg = _gqa_cfg()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    t1 = jax.random.randint(jax.random.PRNGKey(1), (1, 12), 0, cfg.vocab)
+    t2 = t1.at[0, 8:].set((t1[0, 8:] + 1) % cfg.vocab)
+    l1 = T.forward(params, t1, cfg)
+    l2 = T.forward(params, t2, cfg)
+    np.testing.assert_allclose(np.asarray(l1[:, :8]), np.asarray(l2[:, :8]),
+                               atol=1e-5)
+    assert float(jnp.max(jnp.abs(l1[:, 8:] - l2[:, 8:]))) > 1e-4
+
+
+def test_moe_capacity_and_routing():
+    """MoE output must match a dense per-token expert evaluation when
+    capacity is unconstrained."""
+    cfg_moe = MoEConfig(n_experts=4, top_k=2, d_ff_expert=16, n_shared=0,
+                        capacity_factor=8.0)
+    key = jax.random.PRNGKey(3)
+    d, Tn, E = 8, 32, 4
+    params = {
+        "router": jax.random.normal(key, (d, E)),
+        "w1": jax.random.normal(jax.random.fold_in(key, 1), (E, d, 16)) * 0.2,
+        "w2": jax.random.normal(jax.random.fold_in(key, 2), (E, 16, d)) * 0.2,
+        "w3": jax.random.normal(jax.random.fold_in(key, 3), (E, d, 16)) * 0.2,
+    }
+    x = jax.random.normal(jax.random.fold_in(key, 4), (Tn, d))
+    got = T.moe_block(x, params, cfg_moe)
+    # dense oracle
+    logits = x @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gate, eidx = jax.lax.top_k(probs, 2)
+    gate = gate / gate.sum(-1, keepdims=True)
+    want = jnp.zeros_like(x)
+    for t in range(Tn):
+        acc = jnp.zeros((d,))
+        for j in range(2):
+            e = int(eidx[t, j])
+            h = jax.nn.silu(x[t] @ params["w1"][e]) * (x[t] @ params["w3"][e])
+            acc = acc + gate[t, j] * (h @ params["w2"][e])
+        want = want.at[t].set(acc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-5,
+                               rtol=1e-4)
+
+
+def test_moe_drops_beyond_capacity():
+    cfg_moe = MoEConfig(n_experts=2, top_k=1, d_ff_expert=8, n_shared=0,
+                        capacity_factor=0.5)  # tight capacity
+    key = jax.random.PRNGKey(4)
+    d, Tn = 4, 16
+    params = {
+        "router": jnp.zeros((d, 2)).at[:, 0].set(10.0),  # all -> expert 0
+        "w1": jnp.ones((2, d, 8)) * 0.1,
+        "w2": jnp.ones((2, 8, d)) * 0.1,
+        "w3": jnp.ones((2, d, 8)) * 0.1,
+    }
+    # positive activations => positive router logit => ALL tokens pick e0
+    x = jnp.abs(jax.random.normal(key, (Tn, d))) + 0.1
+    out = T.moe_block(x, params, cfg_moe)
+    # capacity = ceil(16 * 1 / 2 * 0.5) = 4 tokens survive
+    nonzero_rows = int(jnp.sum(jnp.any(jnp.abs(out) > 1e-9, axis=1)))
+    assert nonzero_rows == 4, nonzero_rows
+
+
+# ---------------------------------------------------------------------------
+# GNN equivariance properties
+# ---------------------------------------------------------------------------
+
+def _random_rotation(seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((3, 3))
+    q, r = np.linalg.qr(a)
+    q = q @ np.diag(np.sign(np.diag(r)))
+    if np.linalg.det(q) < 0:
+        q[:, 0] = -q[:, 0]
+    return jnp.asarray(q, jnp.float32)
+
+
+def _mol_batch(seed=0, cap=None):
+    m = synthetic_molecules(4, 8, 16, 8, seed=seed, triplet_cap=cap)
+    return m
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_egnn_equivariance(seed):
+    m = _mol_batch(seed)
+    cfg = egnn.EGNNConfig(d_in=8, n_layers=2, d_hidden=16)
+    params = egnn.init_params(jax.random.PRNGKey(seed), cfg)
+    R = _random_rotation(seed)
+    t = jnp.asarray([1.5, -2.0, 0.5])
+
+    def run(pos):
+        b = make_batch_from_arrays(m["nodes"], m["edge_src"], m["edge_dst"],
+                                   pos=pos, graph_id=m["graph_id"],
+                                   n_graphs=m["n_graphs"])
+        return egnn.forward(params, b, cfg)
+
+    out1, x1 = run(jnp.asarray(m["pos"]))
+    out2, x2 = run(jnp.asarray(m["pos"]) @ R.T + t)
+    # invariant outputs, equivariant coordinates
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-3,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(x1 @ R.T + t), np.asarray(x2),
+                               atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_mace_equivariance(seed):
+    m = _mol_batch(seed)
+    cfg = mace.MACEConfig(d_in=8, n_layers=2, d_hidden=8, n_rbf=4)
+    params = mace.init_params(jax.random.PRNGKey(seed), cfg)
+    R = _random_rotation(seed + 10)
+    t = jnp.asarray([0.3, 0.1, -0.7])
+
+    def run(pos):
+        b = make_batch_from_arrays(m["nodes"], m["edge_src"], m["edge_dst"],
+                                   pos=pos, graph_id=m["graph_id"],
+                                   n_graphs=m["n_graphs"])
+        return mace.forward(params, b, cfg)
+
+    e1, f1 = run(jnp.asarray(m["pos"]))
+    e2, f2 = run(jnp.asarray(m["pos"]) @ R.T + t)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), atol=2e-3,
+                               rtol=2e-3)  # invariant energy
+    # vector features rotate: v' = v @ R.T
+    np.testing.assert_allclose(np.asarray(f1["v"] @ R.T), np.asarray(f2["v"]),
+                               atol=2e-3, rtol=2e-3)
+    # rank-2 features conjugate: t' = R t R^T
+    want_t = jnp.einsum("ab,ncbd,ed->ncae", R, f1["t"], R)
+    np.testing.assert_allclose(np.asarray(want_t), np.asarray(f2["t"]),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_dimenet_rototranslation_invariance(seed=0):
+    m = _mol_batch(seed, cap=8)
+    cfg = dimenet.DimeNetConfig(d_in=8, n_blocks=2, d_hidden=16,
+                                n_bilinear=2, n_spherical=3, n_radial=3)
+    params = dimenet.init_params(jax.random.PRNGKey(seed), cfg)
+    R = _random_rotation(seed + 20)
+
+    def run(pos):
+        b = make_batch_from_arrays(m["nodes"], m["edge_src"], m["edge_dst"],
+                                   pos=pos, graph_id=m["graph_id"],
+                                   n_graphs=m["n_graphs"],
+                                   triplets=tuple(jnp.asarray(t)
+                                                  for t in m["triplets"]))
+        return dimenet.forward(params, b, cfg)
+
+    e1 = run(jnp.asarray(m["pos"]))
+    e2 = run(jnp.asarray(m["pos"]) @ R.T + 3.0)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), atol=1e-3,
+                               rtol=1e-3)
+
+
+def test_gin_permutation_invariance():
+    rng = np.random.default_rng(0)
+    N, E, F = 10, 30, 8
+    nodes = rng.standard_normal((N, F)).astype(np.float32)
+    src = rng.integers(0, N, E).astype(np.int32)
+    dst = rng.integers(0, N, E).astype(np.int32)
+    cfg = gin.GINConfig(d_in=F, n_layers=2, d_hidden=16, n_classes=3)
+    params = gin.init_params(jax.random.PRNGKey(0), cfg)
+    b1 = make_batch_from_arrays(nodes, src, dst)
+    out1 = gin.forward(params, b1, cfg)
+    perm = rng.permutation(N)
+    inv = np.argsort(perm)
+    b2 = make_batch_from_arrays(nodes[perm], inv[src], inv[dst])
+    out2 = gin.forward(params, b2, cfg)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-4,
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# DIN / EmbeddingBag
+# ---------------------------------------------------------------------------
+
+def test_embedding_bag_matches_loop():
+    rng = np.random.default_rng(0)
+    table = jnp.asarray(rng.standard_normal((50, 8)), jnp.float32)
+    ids = jnp.asarray([3, 4, 7, 0, 1, 2, 9], jnp.int32)
+    offsets = jnp.asarray([0, 3, 3, 5], jnp.int32)   # bags: [0:3),[3:3),[3:5),[5:7)
+    out = din.embedding_bag(table, ids, offsets, 4)
+    want = np.stack([
+        np.asarray(table)[[3, 4, 7]].sum(0),
+        np.zeros(8),
+        np.asarray(table)[[0, 1]].sum(0),
+        np.asarray(table)[[2, 9]].sum(0),
+    ])
+    np.testing.assert_allclose(np.asarray(out), want, atol=1e-6)
+
+
+def test_din_retrieval_matches_forward():
+    """score_candidates(cand batch) == forward() on each candidate."""
+    cfg = din.DINConfig(name="t", embed_dim=8, seq_len=6, attn_mlp=(8, 4),
+                        mlp=(12, 6), n_items=100, n_cates=10,
+                        n_user_feats=20)
+    params = din.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    hist = rng.integers(0, 100, 6).astype(np.int32)
+    cands = rng.integers(0, 100, 5).astype(np.int32)
+    rbatch = {"hist_items": jnp.asarray(hist),
+              "hist_cates": jnp.asarray(hist % 10),
+              "user_id": jnp.asarray(3, jnp.int32),
+              "cand_items": jnp.asarray(cands),
+              "cand_cates": jnp.asarray(cands % 10)}
+    scores = din.score_candidates(params, rbatch, cfg)
+    fbatch = {"hist_items": jnp.asarray(np.tile(hist, (5, 1))),
+              "hist_cates": jnp.asarray(np.tile(hist % 10, (5, 1))),
+              "cand_item": jnp.asarray(cands),
+              "cand_cate": jnp.asarray(cands % 10),
+              "user_id": jnp.full((5,), 3, jnp.int32)}
+    want = din.forward(params, fbatch, cfg)
+    np.testing.assert_allclose(np.asarray(scores), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_din_padding_ignored():
+    cfg = din.DINConfig(name="t", embed_dim=8, seq_len=6, attn_mlp=(8, 4),
+                        mlp=(12, 6), n_items=100, n_cates=10,
+                        n_user_feats=20)
+    params = din.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    h1 = rng.integers(0, 100, (2, 6)).astype(np.int32)
+    h1[:, 4:] = -1
+    h2 = h1.copy()
+    h2[:, 4:] = 55  # different garbage behind the pad...
+    h2[:, 4:] = -1  # ...must stay -1; instead vary cates behind pads
+    base = {"cand_item": jnp.asarray([1, 2], jnp.int32),
+            "cand_cate": jnp.asarray([1, 2], jnp.int32),
+            "user_id": jnp.asarray([0, 1], jnp.int32)}
+    o1 = din.forward(params, {**base, "hist_items": jnp.asarray(h1),
+                              "hist_cates": jnp.asarray(h1 % 10)}, cfg)
+    o2 = din.forward(params, {**base, "hist_items": jnp.asarray(h2),
+                              "hist_cates": jnp.asarray(h2 % 10)}, cfg)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-6)

@@ -1,0 +1,147 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.graph import generators, make_graph, connected_components, INT
+from repro.core import (build_problem, exact_coreness, approx_coreness,
+                        build_hierarchy_levels, nh_coreness, nh_hierarchy,
+                        build_hierarchy_interleaved)
+
+import jax.numpy as jnp
+
+SETTINGS = dict(max_examples=15, deadline=None,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+def _random_graph(n, m, seed):
+    rng = np.random.default_rng(seed)
+    if m == 0:
+        return make_graph(n, np.zeros((0, 2), np.int64))
+    e = rng.integers(0, n, size=(m, 2))
+    return make_graph(n, e)
+
+
+@settings(**SETTINGS)
+@given(st.integers(4, 24), st.integers(0, 80), st.integers(0, 10**6),
+       st.sampled_from([(1, 2), (2, 3), (1, 3)]))
+def test_exact_matches_sequential_oracle(n, m, seed, rs):
+    g = _random_graph(n, m, seed)
+    p = build_problem(g, *rs)
+    if p.n_r == 0:
+        return
+    got = np.asarray(exact_coreness(p).core)
+    want, _ = nh_coreness(p)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(**SETTINGS)
+@given(st.integers(6, 20), st.integers(5, 60), st.integers(0, 10**6))
+def test_coreness_monotone_under_edge_addition(n, m, seed):
+    """Adding edges never decreases any surviving edge's (2,3) core number."""
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, n, size=(m, 2))
+    g1 = make_graph(n, e[: m // 2])
+    g2 = make_graph(n, e)
+    p1 = build_problem(g1, 2, 3)
+    p2 = build_problem(g2, 2, 3)
+    if p1.n_r == 0:
+        return
+    c1 = np.asarray(exact_coreness(p1).core)
+    c2 = np.asarray(exact_coreness(p2).core)
+    r1 = np.asarray(p1.r_cliques)
+    r2 = np.asarray(p2.r_cliques)
+    # map each r-clique of g1 into g2's table
+    lut = {tuple(row): i for i, row in enumerate(r2)}
+    for i, row in enumerate(r1):
+        j = lut.get(tuple(row))
+        assert j is not None
+        assert c2[j] >= c1[i], (row, c1[i], c2[j])
+
+
+@settings(**SETTINGS)
+@given(st.integers(5, 20), st.integers(0, 60), st.integers(0, 10**6),
+       st.sampled_from([0.1, 0.5, 1.0]))
+def test_approx_bounds_hold(n, m, seed, delta):
+    from math import comb
+    g = _random_graph(n, m, seed)
+    p = build_problem(g, 2, 3)
+    if p.n_r == 0:
+        return
+    e = np.asarray(exact_coreness(p).core)
+    a = np.asarray(approx_coreness(p, delta=delta).core)
+    factor = (comb(3, 2) + delta) * (1 + delta)
+    assert (a >= e).all()
+    assert (a <= np.maximum(np.ceil(factor * e), e)).all()
+
+
+@settings(**SETTINGS)
+@given(st.integers(5, 18), st.integers(0, 50), st.integers(0, 10**6))
+def test_interleaved_tree_matches_two_phase(n, m, seed):
+    g = _random_graph(n, m, seed)
+    p = build_problem(g, 2, 3)
+    if p.n_r == 0:
+        return
+    res = build_hierarchy_interleaved(p)
+    core = exact_coreness(p).core
+    t_te = build_hierarchy_levels(p, core)
+    rng = np.random.default_rng(seed)
+    k = min(40, p.n_r * p.n_r)
+    pairs = np.stack([rng.integers(0, p.n_r, k),
+                      rng.integers(0, p.n_r, k)], axis=1)
+    np.testing.assert_array_equal(res.tree.join_levels(pairs),
+                                  t_te.join_levels(pairs))
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 30), st.integers(0, 60), st.integers(0, 10**6))
+def test_connectivity_matches_bfs(n, m, seed):
+    g = _random_graph(n, m, seed)
+    e = np.asarray(g.edges)
+    labels = np.asarray(connected_components(
+        n, jnp.asarray(e[:, 0], INT), jnp.asarray(e[:, 1], INT)))
+    # BFS oracle
+    adj = [[] for _ in range(n)]
+    for u, v in e:
+        adj[u].append(v)
+        adj[v].append(u)
+    want = -np.ones(n, np.int64)
+    for s in range(n):
+        if want[s] >= 0:
+            continue
+        stack, comp = [s], []
+        want[s] = s
+        while stack:
+            x = stack.pop()
+            comp.append(x)
+            for y in adj[x]:
+                if want[y] < 0:
+                    want[y] = s
+                    stack.append(y)
+        mn = min(comp)
+        for x in comp:
+            want[x] = mn
+    np.testing.assert_array_equal(labels, want)
+
+
+@settings(**SETTINGS)
+@given(st.integers(4, 16), st.integers(0, 40), st.integers(0, 10**6))
+def test_hierarchy_tree_wellformed(n, m, seed):
+    """Structural invariants: acyclic parents, monotone levels, leaves."""
+    g = _random_graph(n, m, seed)
+    p = build_problem(g, 1, 2)
+    if p.n_r == 0:
+        return
+    core = exact_coreness(p).core
+    t = build_hierarchy_levels(p, core)
+    for i in range(t.n_nodes):
+        par = t.parent[i]
+        if par >= 0:
+            assert par >= t.n_leaves            # parents are internal
+            assert t.level[par] <= t.level[i]   # levels shrink upward
+            assert par != i
+    # every internal node has >= 2 children (TE construction invariant)
+    from collections import Counter
+    kids = Counter(t.parent[t.parent >= 0])
+    for node, cnt in kids.items():
+        assert cnt >= 2 or node < t.n_leaves
