@@ -1,0 +1,16 @@
+# Tier-1 verification (ROADMAP.md): CPU-only, wall-clock bounded so the
+# eager-loop regression class (host-synced peel rounds) is caught
+# mechanically — a hung or quadratically-slow suite fails, not stalls.
+VERIFY_BUDGET ?= 2400
+
+.PHONY: verify bench quick-bench
+
+verify:
+	JAX_PLATFORMS=cpu PYTHONPATH=src timeout $(VERIFY_BUDGET) \
+		python -m pytest -x -q
+
+bench:
+	JAX_PLATFORMS=cpu PYTHONPATH=src python -m benchmarks.run
+
+quick-bench:
+	JAX_PLATFORMS=cpu PYTHONPATH=src python -m benchmarks.run --quick

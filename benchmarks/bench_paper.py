@@ -8,15 +8,49 @@ against the sequential NH oracle, mirroring the paper's ANH-* vs NH setup.
 from __future__ import annotations
 
 import numpy as np
+import jax.numpy as jnp
 
 from repro.core import (build_problem, exact_coreness, approx_coreness,
                         build_hierarchy_levels, build_hierarchy_basic,
                         build_hierarchy_interleaved, nh_full, nh_coreness,
                         cut_hierarchy, nuclei_without_hierarchy,
-                        edge_density, nucleus_vertex_sets)
+                        edge_density, nucleus_vertex_sets, make_schedule)
+from repro.core.engine import BIG
 from .common import suite, timed, row
 
 RS_GRID = [(1, 2), (2, 3), (1, 3), (2, 4), (3, 4)]
+
+
+def _dense_eager(problem, kind: str, delta: float = 0.1):
+    """The pre-engine eager dense formulation: one fixed-shape pass per round
+    with per-op dispatch and a host sync on the bucket minimum.  Kept ONLY as
+    the benchmark baseline the compiled engine lane is measured against —
+    src/repro has exactly one peel-round body (repro.core.engine)."""
+    schedule = make_schedule(problem, kind, delta)
+    n_r = problem.n_r
+    deg = problem.deg0
+    core = jnp.full((n_r,), -1, jnp.int32)
+    peeled = jnp.zeros((n_r,), bool)
+    s_alive = jnp.ones((problem.n_s,), bool)
+    sched = schedule.init_carry()
+    rounds, n_left = 0, n_r
+    while n_left > 0:
+        dmin = int(jnp.min(jnp.where(peeled, BIG, deg)))  # host sync
+        sched, level = schedule.next_level(sched, dmin)
+        a_mask = (~peeled) & (deg <= level)
+        core = jnp.where(a_mask, level, core)
+        peeled = peeled | a_mask
+        n_left -= int(jnp.sum(a_mask))
+        dead_now = jnp.any(peeled[problem.inc_rid], axis=1) & s_alive
+        s_alive = s_alive & ~dead_now
+        members = problem.inc_rid.reshape(-1)
+        dead_rep = jnp.repeat(dead_now, problem.n_sub,
+                              total_repeat_length=members.shape[0])
+        deg = deg.at[members].add(-dead_rep.astype(jnp.int32))
+        rounds += 1
+    if kind == "approx":
+        core = jnp.minimum(core, problem.deg0)
+    return core, rounds
 
 
 def fig6_variants(quick=False) -> list[str]:
@@ -70,8 +104,10 @@ def fig7_grid(quick=False) -> list[str]:
 def fig8_scaling(quick=False) -> list[str]:
     """Scalability.  This container has ONE core, so the paper's
     thread-scaling axis is replaced by (a) problem-size scaling of the
-    batched algorithm and (b) the measured peel-round count (the span term
-    that sets parallel time on a real machine)."""
+    batched algorithm, (b) the measured peel-round count (the span term
+    that sets parallel time on a real machine), and (c) the engine lane:
+    the compiled lax.while_loop engine vs the eager per-round dense loop
+    it replaced (compile time excluded via warmup)."""
     from repro.graph import generators
     rows = []
     sizes = [500, 1_000] if quick else [500, 1_000, 2_000, 4_000]
@@ -84,6 +120,16 @@ def fig8_scaling(quick=False) -> list[str]:
         res_a, t_a = timed(lambda: approx_coreness(problem, delta=0.1))
         rows.append(row(f"fig8/ba{n}/approx", t_a,
                         f"rounds={res_a.rounds}"))
+        for kind in ("exact", "approx"):
+            peel = (exact_coreness if kind == "exact" else approx_coreness)
+            _, t_eager = timed(lambda: _dense_eager(problem, kind))
+            res_e, t_eng = timed(
+                lambda: np.asarray(peel(problem, backend="dense").core),
+                warmup=1)
+            rows.append(row(f"fig8/ba{n}/dense_eager/{kind}", t_eager, ""))
+            rows.append(row(
+                f"fig8/ba{n}/engine/{kind}", t_eng,
+                f"speedup_vs_eager={t_eager / max(t_eng, 1e-9):.2f}x"))
     return rows
 
 
@@ -169,6 +215,32 @@ def approx_quality(quick=False) -> list[str]:
     return rows
 
 
+def engine_lane(quick=False) -> list[str]:
+    """Compiled-vs-eager per figure graph: the unified lax.while_loop engine
+    (one jitted call, trace recorded on device) against the eager dense
+    round loop and the eager work-efficient gather loop."""
+    rows = []
+    graphs = suite(["ba2k"] if quick else ["ba2k", "er2k", "planted1k"])
+    for gname, g in graphs.items():
+        for (r, s) in [(1, 2), (2, 3)] + ([] if quick else [(2, 4)]):
+            problem = build_problem(g, r, s)
+            if problem.n_r == 0:
+                continue
+            for kind in ("exact", "approx"):
+                peel = (exact_coreness if kind == "exact"
+                        else approx_coreness)
+                _, t_gather = timed(lambda: np.asarray(peel(problem).core))
+                _, t_eager = timed(lambda: _dense_eager(problem, kind))
+                res, t_eng = timed(
+                    lambda: peel(problem, backend="dense"), warmup=1)
+                rows.append(row(
+                    f"engine/{gname}/r{r}s{s}/{kind}", t_eng,
+                    f"vs_dense_eager={t_eager / max(t_eng, 1e-9):.2f}x;"
+                    f"vs_gather={t_gather / max(t_eng, 1e-9):.2f}x;"
+                    f"rounds={res.rounds}"))
+    return rows
+
+
 ALL = {
     "fig6": fig6_variants,
     "fig7": fig7_grid,
@@ -176,4 +248,5 @@ ALL = {
     "fig9": fig9_baselines,
     "fig10": fig10_nuclei,
     "approx": approx_quality,
+    "engine": engine_lane,
 }

@@ -3,6 +3,11 @@
 `python -m benchmarks.run [--quick] [--only fig6,fig9]` prints
 `name,us_per_call,derived` CSV rows, then the roofline table if dry-run
 artifacts exist.
+
+The `engine` lane (and the engine rows inside fig8) time the compiled
+`lax.while_loop` peel engine against the eager dense round loop it replaced;
+compile time is excluded via a warmup call, so the rows measure steady-state
+wall-clock (what EXPERIMENTS.md records).
 """
 from __future__ import annotations
 
@@ -16,10 +21,17 @@ def main() -> None:
                     help="reduced graph suite / grid")
     ap.add_argument("--only", default="",
                     help="comma-separated subset of benches")
+    ap.add_argument("--list", action="store_true",
+                    help="list available benches and exit")
     ap.add_argument("--skip-roofline", action="store_true")
     args = ap.parse_args()
 
     from . import bench_paper
+    if args.list:
+        for name, fn in bench_paper.ALL.items():
+            doc = (fn.__doc__ or "").strip().splitlines()[0]
+            print(f"{name}: {doc}")
+        return
     only = set(filter(None, args.only.split(",")))
     print("name,us_per_call,derived")
     for name, fn in bench_paper.ALL.items():

@@ -9,6 +9,7 @@ per peel round — see repro.core.distributed).
 """
 import jax.numpy as jnp
 
+from ..core.schedule import PeelSchedule
 from .base import ArchSpec, ShapeCell, register, sds
 
 SHAPES = (
@@ -29,11 +30,32 @@ SHAPES = (
 
 
 def make_config():
-    return {"kind": "nucleus", "schedule": "approx", "delta": 0.1}
+    return {"kind": "nucleus", "schedule": "approx", "delta": 0.1,
+            "compress": False}
 
 
 def make_smoke_config():
-    return {"kind": "nucleus", "schedule": "exact", "delta": 0.1}
+    return {"kind": "nucleus", "schedule": "exact", "delta": 0.1,
+            "compress": False}
+
+
+def make_peel_schedule(cfg, cell: ShapeCell) -> PeelSchedule:
+    """The unified engine schedule for a shape cell — the ONLY place the
+    production lowering decides exact vs approx bucket semantics."""
+    d = cell.dims
+    return PeelSchedule(kind=cfg.get("schedule", "approx"),
+                        s_choose_r=d["C"], delta=cfg.get("delta", 0.1),
+                        n=d["n"])
+
+
+def max_rounds_bound(cfg, cell: ShapeCell) -> int:
+    """Static while_loop trip cap for lowering: the approx schedule peels in
+    O(log^2 n) rounds; exact is capped by n_r (every round peels >= 1)."""
+    import numpy as np
+    d = cell.dims
+    if cfg.get("schedule", "approx") == "approx":
+        return 64 * int(np.ceil(np.log(max(d["n"], 2)) ** 2))
+    return d["n_r"] + 2
 
 
 def input_specs(cfg, cell: ShapeCell):
@@ -46,6 +68,6 @@ SPEC = register(ArchSpec(
     arch_id="nucleus", family="core",
     make_config=make_config, make_smoke_config=make_smoke_config,
     shapes=SHAPES, input_specs=input_specs,
-    notes="the paper's technique itself, sharded: one int32 (n_r,) "
-          "all-reduce per peel round; approx schedule bounds rounds at "
-          "O(log^2 n)"))
+    notes="the paper's technique itself, sharded: the unified peel engine "
+          "(repro.core.engine) under shard_map, one int32 (n_r,) all-reduce "
+          "per peel round; approx schedule bounds rounds at O(log^2 n)"))

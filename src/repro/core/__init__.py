@@ -10,17 +10,25 @@ Public surface:
   nh_full / nh_coreness / nh_hierarchy — sequential NH baseline + oracle
   cut_hierarchy / nuclei_without_hierarchy — Fig. 10 queries
   sharded_decomposition    — shard_map-distributed peeling (multi-pod ready)
+  PeelSchedule / peel_round / run_peel_engine — the ONE bucket schedule and
+                             the ONE compiled peel-round body every backend
+                             (dense, distributed) shares; gather drives the
+                             same schedule eagerly
+  replay_trace             — LINK-EFFICIENT over the on-device peel trace
 """
 from .incidence import NucleusProblem, build_problem
+from .schedule import PeelSchedule
+from .engine import (peel_round, run_peel_engine, dense_coreness,
+                     make_schedule, scatter_decrement)
 from .peel import PeelResult, exact_coreness, approx_coreness
 from .hierarchy import (HierarchyTree, build_hierarchy_levels,
                         build_hierarchy_basic, hierarchy_edges)
 from .interleaved import (LinkState, InterleavedResult,
                           build_hierarchy_interleaved,
-                          construct_tree_efficient)
+                          construct_tree_efficient, replay_trace)
 from .nh_baseline import (nh_coreness, nh_hierarchy, nh_full,
                           brute_force_coreness)
 from .nuclei import (cut_hierarchy, nuclei_without_hierarchy,
                      nucleus_vertex_sets, edge_density, same_partition)
-from .distributed import (PeelSchedule, sharded_decomposition,
+from .distributed import (sharded_decomposition,
                           make_sharded_decomposition, pad_incidence)

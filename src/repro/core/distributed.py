@@ -1,29 +1,22 @@
 """Distributed (r, s) nucleus decomposition under `jax.shard_map`.
 
-The paper's shared-memory peel loop, recast for a TPU pod: the s-clique
-incidence structure is partitioned across devices (each device owns a
-contiguous slab of s-cliques); r-clique degree/peeled state is replicated.
-One peel round is then:
-
-    local:  dead = any(peeled[inc_local]) & alive_local        (gather)
-    local:  delta = segment-add of dead rows' members          (scatter)
-    comm:   delta = psum(delta)                                (all-reduce)
-    local:  deg -= delta; peel mask from global min            (elementwise)
-
-— i.e. exactly one all-reduce of an (n_r,) int32 vector per round, the
-distributed analogue of the paper's atomic decrements.  The whole loop is a
+A thin wrapper over the unified peel engine (``repro.core.engine``): the
+s-clique incidence structure is partitioned across devices (each device owns
+a contiguous slab of s-cliques); r-clique degree/peeled state is replicated.
+The shared ``peel_round`` body runs per shard with its ``reduce_delta`` hook
+bound to one psum of the (n_r,) int32 decrement vector — the distributed
+analogue of the paper's atomic decrements.  The whole loop is the engine's
 `lax.while_loop` with fixed shapes, so it jits, lowers and compiles for any
 mesh (this is what the multi-pod dry-run exercises).
 
-Both exact and approximate (Alg. 2) bucket schedules are supported; the
-approximate schedule's geometric thresholds make the trip count O(log^2 n),
-which is the paper's span result translated to "number of all-reduces".
+Both exact and approximate (Alg. 2) bucket schedules are supported via the
+same ``PeelSchedule`` every backend uses; the approximate schedule's
+geometric thresholds make the trip count O(log^2 n), which is the paper's
+span result translated to "number of all-reduces".
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from math import comb, log
+from math import comb
 from typing import Optional
 
 import jax
@@ -32,15 +25,33 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..graph import INT
+from .engine import run_peel_engine
 from .incidence import NucleusProblem
+from .schedule import PeelSchedule
 
-BIG = np.iinfo(np.int32).max
+def _shard_map(f, mesh, in_specs, out_specs):
+    """jax.shard_map moved out of experimental after 0.4.x; support both."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map
+    # the engine's while_loop carries per-shard state (alive/residual), which
+    # the legacy replication checker cannot type — the modern VMA tracker
+    # handles it via pvary, so only disable checking on the legacy path
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+def _pvary(x, axis_names):
+    """Mark x device-varying for shard_map VMA tracking (no-op pre-VMA)."""
+    fn = getattr(jax.lax, "pvary", None)
+    return fn(x, axis_names) if fn is not None else x
 
 
 def pad_incidence(inc_rid: jnp.ndarray, n_shards: int):
     """Pad the s-clique axis to a multiple of the shard count.
 
-    Padded rows point at a ghost r-clique id (n_r) whose updates are dropped.
+    Padded rows point at a ghost r-clique id (-1) whose updates are dropped.
     """
     n_s, C = inc_rid.shape
     pad = (-n_s) % n_shards
@@ -48,98 +59,6 @@ def pad_incidence(inc_rid: jnp.ndarray, n_shards: int):
         ghost = jnp.full((pad, C), -1, INT)
         inc_rid = jnp.concatenate([inc_rid, ghost], axis=0)
     return inc_rid, n_s + pad
-
-
-@dataclasses.dataclass(frozen=True)
-class PeelSchedule:
-    """Static bucket schedule. exact: level tracks the running min.
-    approx: geometric buckets (C(s,r)+delta)(1+delta)^i with a round cap."""
-
-    kind: str  # "exact" | "approx"
-    s_choose_r: int = 1
-    delta: float = 0.1
-    n: int = 1
-
-    def init_carry(self):
-        # (bucket index i, rounds_in_bucket, current level)
-        return (jnp.zeros((), INT), jnp.zeros((), INT), jnp.zeros((), INT))
-
-    def cap(self) -> int:
-        return max(1, int(np.ceil(log(max(self.n, 2))
-                                  / log(1.0 + self.delta / self.s_choose_r))))
-
-    def next_level(self, sched, dmin):
-        if self.kind == "exact":
-            i, rib, level = sched
-            level = jnp.maximum(level, dmin)
-            return (i, rib, level), level
-        Cb = self.s_choose_r + self.delta
-        i, rib, _ = sched
-
-        def upper(ix):
-            return jnp.floor(Cb * (1.0 + self.delta) ** (ix + 1.0)).astype(INT)
-
-        def advance(state):
-            ix, r = state
-            return jnp.where((dmin > upper(ix)) | (r >= self.cap()),
-                             ix + 1, ix), jnp.where(
-                                 (dmin > upper(ix)) | (r >= self.cap()), 0, r)
-
-        # advance buckets until dmin fits and the round cap is not exceeded
-        def cond(state):
-            ix, r = state
-            return (dmin > upper(ix)) | (r >= self.cap())
-
-        i, rib = jax.lax.while_loop(cond, lambda s: advance(s), (i, rib))
-        level = upper(i)
-        return (i, rib + 1, level), level
-
-
-def _peel_body(inc_local: jnp.ndarray, deg: jnp.ndarray, peeled: jnp.ndarray,
-               alive_local: jnp.ndarray, core: jnp.ndarray,
-               sched, schedule: PeelSchedule, axis_names,
-               residual: Optional[jnp.ndarray] = None,
-               compress: bool = False):
-    """One peel round on one shard. inc_local: (n_s_local, C).
-
-    compress=True: the (n_r,) int32 delta all-reduce is sent as int16 with
-    per-shard saturation + ERROR FEEDBACK — the saturated remainder stays in
-    a local residual and is re-sent next round.  Degrees therefore lag by at
-    most a round for pathological hubs but never undershoot, and every
-    destroyed incidence is eventually counted exactly (peel levels are
-    monotone, so late decrements only delay a peel, never mis-assign a
-    core).  Halves the per-round collective bytes (the dominant term).
-    """
-    n_r = deg.shape[0]
-    live_deg = jnp.where(peeled, BIG, deg)
-    dmin = jnp.min(live_deg)
-    sched, level = schedule.next_level(sched, dmin)
-    a_mask = (~peeled) & (deg <= level)
-    core = jnp.where(a_mask, level, core)
-    peeled_new = peeled | a_mask
-    # which local s-cliques die this round
-    member_peeled = peeled_new[jnp.clip(inc_local, 0, n_r - 1)]
-    member_peeled = member_peeled | (inc_local < 0)  # ghost rows always "dead"
-    dead_now = jnp.any(member_peeled, axis=1) & alive_local
-    alive_local = alive_local & ~dead_now
-    # local scatter of destroyed incidence, then one all-reduce
-    members = jnp.clip(inc_local, 0, n_r - 1).reshape(-1)
-    valid = ((inc_local >= 0) & dead_now[:, None]).reshape(-1)
-    delta = jnp.zeros((n_r,), INT).at[members].add(valid.astype(INT))
-    if compress:
-        delta = delta + residual
-        sent = jnp.minimum(delta, 32767).astype(jnp.int16)
-        residual = delta - sent.astype(INT)
-        red = sent
-        for ax in axis_names:
-            red = jax.lax.psum(red, ax)  # s16 on the wire: half the bytes
-        delta = red.astype(INT)
-    else:
-        for ax in axis_names:
-            delta = jax.lax.psum(delta, ax)
-    # peeled cliques keep deg frozen (their core is already assigned)
-    deg = jnp.where(peeled_new, deg, deg - delta)
-    return deg, peeled_new, alive_local, core, sched, residual
 
 
 def make_sharded_decomposition(mesh: Mesh, n_r: int, n_s_padded: int, C: int,
@@ -151,45 +70,47 @@ def make_sharded_decomposition(mesh: Mesh, n_r: int, n_s_padded: int, C: int,
     Returns (fn, in_shardings, out_shardings); fn(inc_rid, deg0) -> (core,
     rounds).  inc_rid is sharded over all mesh axes (s-clique partition),
     state is replicated.
+
+    compress=True: the (n_r,) int32 delta all-reduce is sent as int16 with
+    per-shard saturation + ERROR FEEDBACK — the saturated remainder stays in
+    a local residual and is re-sent next round.  Degrees therefore lag by at
+    most a round for pathological hubs but never undershoot, and every
+    destroyed incidence is eventually counted exactly (peel levels are
+    monotone, so late decrements only delay a peel, never mis-assign a
+    core).  Halves the per-round collective bytes (the dominant term).
     """
     axis_names = tuple(mesh.axis_names)
     shard_spec = P(axis_names)      # all axes partition the s-clique dim
     repl_spec = P()
     cap_rounds = max_rounds if max_rounds is not None else n_r + 2
 
+    def reduce_delta(delta, resid):
+        if compress:
+            delta = delta + resid
+            sent = jnp.minimum(delta, 32767).astype(jnp.int16)
+            resid = delta - sent.astype(INT)
+            red = sent
+            for ax in axis_names:
+                red = jax.lax.psum(red, ax)  # s16 on the wire: half the bytes
+            return red.astype(INT), resid
+        for ax in axis_names:
+            delta = jax.lax.psum(delta, ax)
+        return delta, resid
+
     def local_fn(inc_local, deg0):
-        peeled0 = jnp.zeros((n_r,), bool)
-        # alive is per-shard state: mark it device-varying so the while_loop
-        # carry types match (shard_map VMA tracking)
-        alive0 = jax.lax.pvary(jnp.ones((inc_local.shape[0],), bool),
-                               axis_names)
-        core0 = jnp.zeros((n_r,), INT)
-        sched0 = schedule.init_carry()
-        rounds0 = jnp.zeros((), INT)
-
-        resid0 = jax.lax.pvary(
+        # alive/residual are per-shard state: mark them device-varying so
+        # the engine's while_loop carry types match (shard_map VMA tracking)
+        alive0 = _pvary(jnp.ones((inc_local.shape[0],), bool), axis_names)
+        resid0 = _pvary(
             jnp.zeros((n_r,) if compress else (1,), INT), axis_names)
-
-        def cond(carry):
-            _, peeled, _, _, _, rounds, _ = carry
-            return (~jnp.all(peeled)) & (rounds < cap_rounds)
-
-        def body(carry):
-            deg, peeled, alive, core, sched, rounds, resid = carry
-            deg, peeled, alive, core, sched, resid = _peel_body(
-                inc_local, deg, peeled, alive, core, sched, schedule,
-                axis_names, residual=resid if compress else resid,
-                compress=compress)
-            return deg, peeled, alive, core, sched, rounds + 1, resid
-
-        carry = (deg0, peeled0, alive0, core0, sched0, rounds0, resid0)
-        deg, peeled, alive, core, sched, rounds, _ = jax.lax.while_loop(
-            cond, body, carry)
+        core, _order, rounds = run_peel_engine(
+            inc_local, deg0, schedule, max_rounds=cap_rounds,
+            reduce_delta=reduce_delta, resid0=resid0, alive0=alive0)
         return core, rounds
 
-    fn = jax.shard_map(local_fn, mesh=mesh,
-                       in_specs=(shard_spec, repl_spec),
-                       out_specs=(repl_spec, repl_spec))
+    fn = _shard_map(local_fn, mesh=mesh,
+                    in_specs=(shard_spec, repl_spec),
+                    out_specs=(repl_spec, repl_spec))
     in_sh = (NamedSharding(mesh, shard_spec), NamedSharding(mesh, repl_spec))
     out_sh = (NamedSharding(mesh, repl_spec), NamedSharding(mesh, repl_spec))
     return fn, in_sh, out_sh

@@ -1,0 +1,236 @@
+"""The unified peel engine: ONE fixed-shape peel-round body for every backend.
+
+``peel_round`` is the single implementation of a peel round (DESIGN.md
+§"Engine"); ``run_peel_engine`` drives it with a ``lax.while_loop`` so the
+whole peel compiles to one XLA computation — no per-round host sync, no
+eager dispatch.  The same body serves:
+
+  * the single-device dense backend (``peel.exact_coreness(backend="dense")``
+    delegates here, one jitted call per problem shape), and
+  * the ``shard_map`` distributed backend (``repro.core.distributed`` wraps
+    the body with a psum ``reduce_delta`` hook; s-clique slabs are local,
+    r-clique state replicated).
+
+The loop carry records the **peel trace** on device: ``order_round[i]`` is
+the round at which r-clique i peeled and ``core[i]`` the (raw, unclipped)
+bucket value assigned to it.  The trace is information-equivalent to the old
+per-round ``collect_links`` host callback (A_t = {i : order_round[i] == t},
+peel values are the callback's core snapshot), so ANH-EL hierarchy
+construction replays it post-hoc (``interleaved.replay_trace``) and coreness
+stays a single compiled call.
+
+The scatter-decrement hot path (count destroyed incidence per r-clique) has
+two implementations: XLA ``.at[].add`` (the interpret/oracle fallback, and
+the default off-TPU) and a Pallas sorted-segment-sum over the CSR edge array
+(``kernels.segment_sum``), whose one-hot contraction runs on the MXU instead
+of serialized scatter-adds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from math import comb
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph import INT
+from ..kernels.segment_sum import (DEFAULT_BLOCK_N, DEFAULT_CHUNK_E,
+                                   segment_sum_sorted, sorted_ids_plan)
+from .incidence import NucleusProblem
+from .schedule import PeelSchedule
+
+BIG = np.iinfo(np.int32).max
+
+
+def make_schedule(problem: NucleusProblem, kind: str,
+                  delta: float = 0.1) -> PeelSchedule:
+    return PeelSchedule(kind=kind, s_choose_r=comb(problem.s, problem.r),
+                        delta=delta, n=problem.g.n)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScatterSpec:
+    """Static (hashable) config of the Pallas scatter-decrement path."""
+
+    block_n: int
+    chunk_e: int
+    max_chunks: int
+    n_seg_pad: int
+    interpret: bool
+
+
+def scatter_decrement(inc_rid: jnp.ndarray, dead_now: jnp.ndarray,
+                      n_r: int) -> jnp.ndarray:
+    """delta[r] = # of s-cliques dying this round that contain r.
+
+    XLA scatter-add formulation — the oracle the Pallas path is checked
+    against, and the default backend off-TPU.  Rows with negative ids
+    (distributed ghost padding) never contribute.
+    """
+    members = jnp.clip(inc_rid, 0, n_r - 1).reshape(-1)
+    valid = ((inc_rid >= 0) & dead_now[:, None]).reshape(-1)
+    return jnp.zeros((n_r,), INT).at[members].add(valid.astype(INT))
+
+
+def peel_round(inc_rid, deg, peeled, s_alive, core, order_round, sched,
+               rounds, schedule: PeelSchedule, *,
+               reduce_delta: Optional[Callable] = None, resid=None,
+               scatter: Optional[Callable] = None):
+    """THE peel-round body — every backend runs exactly this.
+
+    inc_rid: (n_s_local, C) member r-clique ids (-1 rows = ghost padding);
+    deg/peeled/core/order_round: (n_r,) replicated r-clique state; s_alive:
+    (n_s_local,) local s-clique liveness; sched: schedule carry; rounds: the
+    round counter recorded into the trace.
+
+    reduce_delta(delta, resid) -> (delta, resid) is the distributed
+    all-reduce hook (identity when None); scatter(dead_now) -> (n_r,) delta
+    overrides the decrement implementation (Pallas path).
+    """
+    n_r = deg.shape[0]
+    live_deg = jnp.where(peeled, BIG, deg)
+    dmin = jnp.min(live_deg)
+    sched, level = schedule.next_level(sched, dmin)
+    a_mask = (~peeled) & (deg <= level)
+    core = jnp.where(a_mask, level, core)
+    order_round = jnp.where(a_mask, rounds, order_round)
+    peeled = peeled | a_mask
+    member_peeled = peeled[jnp.clip(inc_rid, 0, n_r - 1)] | (inc_rid < 0)
+    dead_now = jnp.any(member_peeled, axis=1) & s_alive
+    s_alive = s_alive & ~dead_now
+    if scatter is None:
+        delta = scatter_decrement(inc_rid, dead_now, n_r)
+    else:
+        delta = scatter(dead_now)
+    if reduce_delta is not None:
+        delta, resid = reduce_delta(delta, resid)
+    # peeled cliques keep deg frozen (their core is already assigned)
+    deg = jnp.where(peeled, deg, deg - delta)
+    return deg, peeled, s_alive, core, order_round, sched, resid
+
+
+def run_peel_engine(inc_rid, deg0, schedule: PeelSchedule, *,
+                    max_rounds: int,
+                    reduce_delta: Optional[Callable] = None,
+                    resid0=None, alive0=None,
+                    scatter: Optional[Callable] = None):
+    """Drive ``peel_round`` to a fixpoint under one ``lax.while_loop``.
+
+    Returns (core, order_round, rounds): raw bucket values per r-clique, the
+    on-device peel trace, and the round count.  Every round peels at least
+    one clique (the schedule guarantees level >= dmin), so the loop runs at
+    most n_r rounds; max_rounds is a static safety cap for lowering.
+    """
+    n_r = deg0.shape[0]
+    core0 = jnp.full((n_r,), -1, INT)
+    order0 = jnp.full((n_r,), -1, INT)
+    if n_r == 0:
+        return core0, order0, jnp.zeros((), INT)
+    peeled0 = jnp.zeros((n_r,), bool)
+    if alive0 is None:
+        alive0 = jnp.ones((inc_rid.shape[0],), bool)
+    if resid0 is None:
+        resid0 = jnp.zeros((1,), INT)
+    sched0 = schedule.init_carry()
+    rounds0 = jnp.zeros((), INT)
+
+    def cond(carry):
+        _, peeled, _, _, _, _, rounds, _ = carry
+        return (~jnp.all(peeled)) & (rounds < max_rounds)
+
+    def body(carry):
+        deg, peeled, alive, core, order, sched, rounds, resid = carry
+        deg, peeled, alive, core, order, sched, resid = peel_round(
+            inc_rid, deg, peeled, alive, core, order, sched, rounds,
+            schedule, reduce_delta=reduce_delta, resid=resid, scatter=scatter)
+        return deg, peeled, alive, core, order, sched, rounds + 1, resid
+
+    carry = (deg0, peeled0, alive0, core0, order0, sched0, rounds0, resid0)
+    _, _, _, core, order, _, rounds, _ = jax.lax.while_loop(cond, body, carry)
+    return core, order, rounds
+
+
+# ---------------------------------------------------------------------------
+# Single-device dense backend: jitted entry + Pallas scatter plan
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("schedule", "max_rounds", "spec"))
+def _dense_engine(inc_rid, deg0, plan_rids, plan_sids, *,
+                  schedule: PeelSchedule, max_rounds: int,
+                  spec: Optional[ScatterSpec]):
+    n_r = deg0.shape[0]
+    scatter = None
+    if spec is not None:
+        def scatter(dead_now):
+            data = dead_now[plan_sids].astype(INT)[:, None]
+            out = segment_sum_sorted(data, plan_rids, spec.n_seg_pad,
+                                     block_n=spec.block_n,
+                                     chunk_e=spec.chunk_e,
+                                     max_chunks=spec.max_chunks,
+                                     interpret=spec.interpret)
+            return out[:n_r, 0]
+    return run_peel_engine(inc_rid, deg0, schedule, max_rounds=max_rounds,
+                           scatter=scatter)
+
+
+def _scatter_plan(problem: NucleusProblem, block_n: int, chunk_e: int,
+                  interpret: bool):
+    """CSR edge arrays (rid-sorted) padded for the Pallas segment sum.
+
+    Edge k of the flat CSR is (rid=plan_rids[k], sid=plan_sids[k]) with
+    plan_rids ascending — exactly what ``segment_sum_sorted`` wants; the
+    per-round data vector is just ``dead_now[plan_sids]``.  Built once per
+    (problem, kernel tiling) and memoized on the problem: the O(E) host
+    expansion + device upload must not recur on every coreness call.
+    """
+    key = (block_n, chunk_e, interpret)
+    cache = getattr(problem, "_scatter_plans", None)
+    if cache is None:
+        cache = {}
+        problem._scatter_plans = cache
+    if key in cache:
+        return cache[key]
+    counts = np.diff(np.asarray(problem.mem_offsets))
+    rids = np.repeat(np.arange(problem.n_r, dtype=np.int32), counts)
+    rids_pad, n_seg_pad, max_chunks = sorted_ids_plan(
+        rids, problem.n_r, block_n=block_n, chunk_e=chunk_e)
+    sids_pad = np.zeros(rids_pad.shape[0], np.int32)
+    sids_pad[:rids.shape[0]] = np.asarray(problem.mem_sids, np.int32)
+    spec = ScatterSpec(block_n=block_n, chunk_e=chunk_e,
+                       max_chunks=max_chunks, n_seg_pad=n_seg_pad,
+                       interpret=interpret)
+    cache[key] = (jnp.asarray(rids_pad), jnp.asarray(sids_pad), spec)
+    return cache[key]
+
+
+def dense_coreness(problem: NucleusProblem, schedule: PeelSchedule, *,
+                   use_pallas: Optional[bool] = None,
+                   max_rounds: Optional[int] = None,
+                   block_n: int = DEFAULT_BLOCK_N,
+                   chunk_e: int = DEFAULT_CHUNK_E,
+                   interpret: Optional[bool] = None):
+    """One jitted call: (core_raw, order_round, rounds) for the whole peel.
+
+    use_pallas=None picks the Pallas scatter on TPU and the XLA scatter-add
+    elsewhere (Pallas interpret mode is a correctness oracle, not a fast
+    path).  Raw bucket values are returned — approx clipping is the
+    caller's job so the trace keeps the values that drove LINK equality.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if max_rounds is None:
+        max_rounds = problem.n_r + 2
+    dummy = jnp.zeros((0,), INT)
+    if use_pallas and problem.n_s > 0:
+        if interpret is None:
+            interpret = jax.default_backend() == "cpu"
+        rids, sids, spec = _scatter_plan(problem, block_n, chunk_e, interpret)
+    else:
+        rids, sids, spec = dummy, dummy, None
+    core, order, rounds = _dense_engine(problem.inc_rid, problem.deg0,
+                                        rids, sids, schedule=schedule,
+                                        max_rounds=max_rounds, spec=spec)
+    return core, order, rounds

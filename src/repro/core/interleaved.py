@@ -15,6 +15,13 @@ Each fixpoint iteration either merges components or strictly raises
 core[L[root]] somewhere, so it terminates; the per-round worklists mirror the
 sequential cascade one "generation" at a time.
 
+LINK input comes from the **peel trace**, not an in-loop callback: every peel
+backend records (order_round, peel_value) on device, and ``replay_trace``
+reconstructs each round's peeled set A_t = {i : order_round[i] == t} post-hoc
+— information-equivalent to the old per-round host callback stream (DESIGN.md
+§"Engine"), so coreness stays one compiled call while the hierarchy output
+(join levels) is unchanged.
+
 Link-generation work matches ANH-EL's bound: per round, per incident s-clique,
 we emit O(|A ∩ S|) pairs — the chain reduction of DESIGN.md §3 — instead of
 all O(C^2) member pairs (connectivity-equivalent at every level; proven by the
@@ -219,12 +226,16 @@ def construct_tree_efficient(problem: NucleusProblem,
                          level=level[:next_id].copy())
 
 
-def build_hierarchy_interleaved(
-        problem: NucleusProblem,
-        mode: Literal["exact", "approx"] = "exact",
-        delta: float = 0.1,
-        backend: Literal["gather", "dense"] = "gather") -> InterleavedResult:
-    """ANH-EL: peel + LINK-EFFICIENT in a single pass, then one tree post-pass."""
+def replay_trace(problem: NucleusProblem, res: PeelResult) -> LinkState:
+    """Run LINK-EFFICIENT over the recorded peel trace (DESIGN.md §"Engine").
+
+    The trace (order_round, peel_value) determines every round's peeled set
+    A_t = {i : order_round[i] == t} and the bucket value each clique was
+    assigned, which is exactly what the old ``collect_links`` callback saw —
+    so the per-round link stream, and therefore uf/L and the final tree, are
+    identical.  One stable argsort groups cliques by round, then the replay
+    feeds ``_round_links``/``process_links`` round by round.
+    """
     n_r, n_s = problem.n_r, problem.n_s
     state = LinkState.create(n_r)
     mem_off = np.asarray(problem.mem_offsets).astype(np.int64)
@@ -232,24 +243,38 @@ def build_hierarchy_interleaved(
     inc = np.asarray(problem.inc_rid).astype(np.int64)
     last_peeled = np.full(n_s, -1, np.int64)
     peeled_np = np.zeros(n_r, bool)
-
-    def collect(a_ids_j, core_j, peeled_j):
-        nonlocal last_peeled, peeled_np
-        a_ids = np.asarray(a_ids_j).astype(np.int64)
-        state.core[a_ids] = np.asarray(core_j)[a_ids]
+    order = np.asarray(res.order_round).astype(np.int64)
+    value = np.asarray(res.peel_value).astype(np.int64)
+    ids = np.nonzero(order >= 0)[0]
+    ids = ids[np.argsort(order[ids], kind="stable")].astype(np.int64)
+    bounds = np.searchsorted(order[ids], np.arange(int(res.rounds) + 1))
+    for t in range(int(res.rounds)):
+        a_ids = ids[bounds[t]:bounds[t + 1]]
+        if a_ids.shape[0] == 0:
+            continue
+        state.core[a_ids] = value[a_ids]
         peeled_np[a_ids] = True
-        (a, b), last_peeled[:] = _round_links(
+        (a, b), last_peeled = _round_links(
             problem, a_ids, last_peeled, mem_off, mem_sid, inc, peeled_np)
         state.process_links(a, b)
+    return state
 
+
+def build_hierarchy_interleaved(
+        problem: NucleusProblem,
+        mode: Literal["exact", "approx"] = "exact",
+        delta: float = 0.1,
+        backend: Literal["gather", "dense"] = "gather") -> InterleavedResult:
+    """ANH-EL: one peel pass (trace recorded on device), one LINK replay,
+    one tree post-pass.  With backend="dense" the peel is a single jitted
+    call; LINK work is unchanged from the callback formulation."""
     if mode == "exact":
-        res: PeelResult = exact_coreness(problem, backend=backend,
-                                         collect_links=collect)
+        res: PeelResult = exact_coreness(problem, backend=backend)
     else:
-        # NOTE: the tree keeps the (unclipped) bucket values that drove the
+        # NOTE: replay sees the (unclipped) bucket values that drove the
         # LINK equality structure; res.core carries the clipped estimates.
-        res = approx_coreness(problem, delta=delta, backend=backend,
-                              collect_links=collect)
+        res = approx_coreness(problem, delta=delta, backend=backend)
+    state = replay_trace(problem, res)
     tree = construct_tree_efficient(problem, state)
     return InterleavedResult(core=res.core, tree=tree, rounds=res.rounds,
                              state=state)

@@ -1,29 +1,33 @@
 """Parallel peeling: exact (ARB-NUCLEUS analog) and approximate (Alg. 2).
 
-Two backends share the bucketed peel loop:
+Two backends, one schedule (``repro.core.schedule.PeelSchedule``) and one
+round body (``repro.core.engine.peel_round``):
 
   * ``gather``: each round touches only the s-cliques incident to the peeled
     set (CSR gather + unique + segment add) — the work-efficient formulation
-    matching the paper's bounds; shapes are data-dependent per round (eager).
-  * ``dense``: each round is a fixed-shape pass over the whole incidence
-    structure — O(rounds * n_s * C) work but fully jit-able.  For the
+    matching the paper's bounds; shapes are data-dependent per round, so this
+    backend stays an eager host loop.
+  * ``dense``: delegates to the compiled engine — every round is a
+    fixed-shape pass over the whole incidence structure inside one
+    ``lax.while_loop``, so the entire peel is a single jitted call.  For the
     approximate algorithm rounds = O(log^2 n), so this is the TPU-preferred
-    backend there (and a hillclimb lever recorded in EXPERIMENTS.md).
+    backend there (hillclimb lever + measurements in EXPERIMENTS.md).
+
+Both backends record the peel trace (``order_round`` + raw peel values),
+which ``interleaved.replay_trace`` consumes to build the ANH-EL hierarchy
+without any in-loop callback.
 """
 from __future__ import annotations
 
 import dataclasses
-from math import comb, log
-from typing import Literal
+from typing import Literal, Optional
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..graph import INT
+from .engine import BIG, dense_coreness, make_schedule
 from .incidence import NucleusProblem
-
-BIG = np.iinfo(np.int32).max
+from .schedule import PeelSchedule
 
 
 @dataclasses.dataclass
@@ -31,6 +35,13 @@ class PeelResult:
     core: jnp.ndarray          # (n_r,) int32 — exact or estimated core numbers
     rounds: int                # number of peel rounds (peeling-complexity proxy)
     order_round: jnp.ndarray   # (n_r,) round index at which each clique peeled
+    peel_value: jnp.ndarray = None  # (n_r,) raw bucket value assigned at peel
+    # time (pre-clipping) — the trace value LINK replay needs; == core
+    # for exact peeling.
+
+    def __post_init__(self):
+        if self.peel_value is None:
+            self.peel_value = self.core
 
 
 def _gather_incident_sids(problem: NucleusProblem, a_ids: jnp.ndarray) -> jnp.ndarray:
@@ -47,122 +58,74 @@ def _gather_incident_sids(problem: NucleusProblem, a_ids: jnp.ndarray) -> jnp.nd
     return problem.mem_sids[off[a_ids][rep] + pos]
 
 
-def _peel_loop(problem: NucleusProblem, thresholds, assign_value,
-               backend: Literal["gather", "dense"] = "gather",
-               collect_links=None) -> PeelResult:
-    """Shared bucketed peel loop.
+def _peel_loop(problem: NucleusProblem, schedule: PeelSchedule) -> PeelResult:
+    """Work-efficient gather backend: eager host loop, data-dependent shapes.
 
-    thresholds: iterator protocol object with .current(dmin) -> (level used for
-    the peel mask, value to assign); exact peeling sets both to the running
-    max of dmin, approximate peeling uses geometric bucket upper bounds.
+    The bucket sequence comes from the same ``PeelSchedule`` the compiled
+    engine uses (level >= dmin every round, so each iteration peels at least
+    the minimum-degree clique and the loop always terminates).
     """
-    n_r, n_s = problem.n_r, problem.n_s
+    n_r = problem.n_r
     deg = problem.deg0
     core = jnp.full((n_r,), -1, INT)
     order_round = jnp.full((n_r,), -1, INT)
     peeled = jnp.zeros((n_r,), bool)
-    s_alive = jnp.ones((n_s,), bool)
+    s_alive = jnp.ones((problem.n_s,), bool)
+    sched = schedule.init_carry()
     rounds = 0
     n_left = n_r
     while n_left > 0:
         live_deg = jnp.where(peeled, BIG, deg)
-        dmin = int(jnp.min(live_deg))
-        level, value = thresholds.step(dmin)
-        if level is None:  # bucket advanced without peeling
-            continue
+        sched, level = schedule.next_level(sched, jnp.min(live_deg))
         a_mask = (~peeled) & (deg <= level)
-        n_a = int(jnp.sum(a_mask))
-        if n_a == 0:
-            thresholds.empty_bucket()
-            continue
-        value_arr = value if isinstance(value, jnp.ndarray) else jnp.full((n_r,), value, INT)
-        core = jnp.where(a_mask, value_arr, core)
+        core = jnp.where(a_mask, level, core)
         order_round = jnp.where(a_mask, rounds, order_round)
         peeled = peeled | a_mask
-        n_left -= n_a
+        n_left -= int(jnp.sum(a_mask))
         a_ids = jnp.nonzero(a_mask)[0].astype(INT)
-        if collect_links is not None:
-            collect_links(a_ids, core, peeled)
-        if backend == "gather":
-            sids = _gather_incident_sids(problem, a_ids)
-            if int(sids.shape[0]):
-                sids_u = jnp.unique(sids)
-                newly = sids_u[s_alive[sids_u]]
-                if int(newly.shape[0]):
-                    s_alive = s_alive.at[newly].set(False)
-                    members = problem.inc_rid[newly].reshape(-1)
-                    deg = deg.at[members].add(-1)
-        else:  # dense
-            first_peel = peeled[problem.inc_rid]  # (n_s, C)
-            dead_now = jnp.any(first_peel, axis=1) & s_alive
-            s_alive = s_alive & ~dead_now
-            members = problem.inc_rid.reshape(-1)
-            dead_rep = jnp.repeat(dead_now, problem.n_sub,
-                                  total_repeat_length=members.shape[0])
-            deg = deg.at[members].add(-dead_rep.astype(INT))
+        sids = _gather_incident_sids(problem, a_ids)
+        if int(sids.shape[0]):
+            sids_u = jnp.unique(sids)
+            newly = sids_u[s_alive[sids_u]]
+            if int(newly.shape[0]):
+                s_alive = s_alive.at[newly].set(False)
+                members = problem.inc_rid[newly].reshape(-1)
+                deg = deg.at[members].add(-1)
         rounds += 1
     return PeelResult(core=core, rounds=rounds, order_round=order_round)
 
 
-class _ExactThresholds:
-    def __init__(self):
-        self.cur = 0
-
-    def step(self, dmin: int):
-        self.cur = max(self.cur, dmin)
-        return self.cur, self.cur
-
-    def empty_bucket(self):  # cannot happen for exact (dmin always peelable)
-        raise AssertionError("exact peel found empty minimum bucket")
-
-
-class _ApproxThresholds:
-    """Geometric buckets of Alg. 2: B_i = [.., (C+delta)(1+delta)^{i+1}]."""
-
-    def __init__(self, n: int, s_choose_r: int, delta: float):
-        self.delta = delta
-        self.Cb = s_choose_r + delta
-        self.i = 0
-        self.rounds_in_bucket = 0
-        # O(log_{1+delta/C(s,r)} n) per-bucket round cap (Alg. 2 line 17)
-        self.cap = max(1, int(np.ceil(log(max(n, 2)) / log(1.0 + delta / s_choose_r))))
-
-    def upper(self) -> int:
-        return int(np.floor(self.Cb * (1.0 + self.delta) ** (self.i + 1)))
-
-    def step(self, dmin: int):
-        # advance buckets until dmin falls inside (skip empty buckets fast)
-        while dmin > self.upper() or self.rounds_in_bucket >= self.cap:
-            self.i += 1
-            self.rounds_in_bucket = 0
-        self.rounds_in_bucket += 1
-        return self.upper(), self.upper()
-
-    def empty_bucket(self):
-        self.i += 1
-        self.rounds_in_bucket = 0
+def _run(problem: NucleusProblem, schedule: PeelSchedule,
+         backend: Literal["gather", "dense"],
+         use_pallas: Optional[bool]) -> PeelResult:
+    if backend == "dense":
+        core, order, rounds = dense_coreness(problem, schedule,
+                                             use_pallas=use_pallas)
+        return PeelResult(core=core, rounds=int(rounds), order_round=order)
+    return _peel_loop(problem, schedule)
 
 
 def exact_coreness(problem: NucleusProblem,
                    backend: Literal["gather", "dense"] = "gather",
-                   collect_links=None) -> PeelResult:
-    return _peel_loop(problem, _ExactThresholds(), None, backend=backend,
-                      collect_links=collect_links)
+                   use_pallas: Optional[bool] = None) -> PeelResult:
+    return _run(problem, make_schedule(problem, "exact"), backend, use_pallas)
 
 
 def approx_coreness(problem: NucleusProblem, delta: float = 0.1,
                     backend: Literal["gather", "dense"] = "gather",
-                    collect_links=None) -> PeelResult:
+                    use_pallas: Optional[bool] = None) -> PeelResult:
     """(C(s,r)+eps)-approximate core numbers, eps = (C+delta)(1+delta)/C - C.
 
     Estimates are >= the true core and <= (C(s,r)+delta)(1+delta) * true core
     (Theorem 6.3).  Practical tightening: assigned value is clipped to the
-    clique's original s-clique-degree (paper §6).
+    clique's original s-clique-degree (paper §6); ``peel_value`` keeps the
+    unclipped bucket values because those drove LINK equality during the
+    peel (the hierarchy replay must see them).
     """
-    th = _ApproxThresholds(problem.g.n, comb(problem.s, problem.r), delta)
-    res = _peel_loop(problem, th, None, backend=backend,
-                     collect_links=collect_links)
+    res = _run(problem, make_schedule(problem, "approx", delta), backend,
+               use_pallas)
     # practical improvement: estimate <= original degree
     core = jnp.minimum(res.core, problem.deg0)
     # still must be >= true core; deg0 >= true core always, so safe.
-    return PeelResult(core=core, rounds=res.rounds, order_round=res.order_round)
+    return PeelResult(core=core, rounds=res.rounds,
+                      order_round=res.order_round, peel_value=res.core)

@@ -1,0 +1,79 @@
+"""The one bucket schedule driving every peel loop (exact + Alg. 2 approx).
+
+``PeelSchedule`` is a static (hashable) description of the threshold
+sequence; its carry is a triple of int32 scalars that rides inside the peel
+engine's ``lax.while_loop`` carry.  The same object drives
+
+  * the eager ``gather`` backend (concrete scalars, Python loop),
+  * the jitted single-device dense engine (``repro.core.engine``), and
+  * the ``shard_map`` distributed loop (``repro.core.distributed``),
+
+so exact/approx bucket semantics exist in exactly one place.
+
+exact:  the level is the running max of the current minimum degree — the
+        classic bucketed peel (ARB-NUCLEUS analog).
+approx: geometric buckets B_i with upper bound (C(s,r)+delta)(1+delta)^{i+1}
+        and a per-bucket round cap of O(log_{1+delta/C(s,r)} n) rounds
+        (Alg. 2 line 17), which bounds total rounds at O(log^2 n).
+"""
+from __future__ import annotations
+
+import dataclasses
+from math import log
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph import INT
+
+
+@dataclasses.dataclass(frozen=True)
+class PeelSchedule:
+    """Static bucket schedule. exact: level tracks the running min.
+    approx: geometric buckets (C(s,r)+delta)(1+delta)^i with a round cap."""
+
+    kind: str  # "exact" | "approx"
+    s_choose_r: int = 1
+    delta: float = 0.1
+    n: int = 1
+
+    def init_carry(self):
+        # (bucket index i, rounds_in_bucket, current level)
+        return (jnp.zeros((), INT), jnp.zeros((), INT), jnp.zeros((), INT))
+
+    def cap(self) -> int:
+        return max(1, int(np.ceil(log(max(self.n, 2))
+                                  / log(1.0 + self.delta / self.s_choose_r))))
+
+    def next_level(self, sched, dmin):
+        """Advance the carry for one round; returns (carry, peel level).
+
+        The returned level always satisfies level >= dmin, so the clique
+        attaining the minimum degree is peelable every round — peel loops
+        never need an empty-bucket path.
+        """
+        if self.kind == "exact":
+            i, rib, level = sched
+            level = jnp.maximum(level, dmin)
+            return (i, rib, level), level
+        Cb = self.s_choose_r + self.delta
+        i, rib, _ = sched
+
+        def upper(ix):
+            return jnp.floor(Cb * (1.0 + self.delta) ** (ix + 1.0)).astype(INT)
+
+        def advance(state):
+            ix, r = state
+            return jnp.where((dmin > upper(ix)) | (r >= self.cap()),
+                             ix + 1, ix), jnp.where(
+                                 (dmin > upper(ix)) | (r >= self.cap()), 0, r)
+
+        # advance buckets until dmin fits and the round cap is not exceeded
+        def cond(state):
+            ix, r = state
+            return (dmin > upper(ix)) | (r >= self.cap())
+
+        i, rib = jax.lax.while_loop(cond, lambda s: advance(s), (i, rib))
+        level = upper(i)
+        return (i, rib + 1, level), level

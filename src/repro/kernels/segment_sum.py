@@ -30,6 +30,33 @@ DEFAULT_BLOCK_N = 128
 DEFAULT_CHUNK_E = 512
 
 
+def sorted_ids_plan(ids: np.ndarray, n_segments: int,
+                    block_n: int = DEFAULT_BLOCK_N,
+                    chunk_e: int = DEFAULT_CHUNK_E):
+    """Pad a concrete sorted id array so `segment_sum_sorted` jits.
+
+    Returns ``(ids_padded, n_seg_pad, max_chunks)``: ids padded to a chunk_e
+    multiple (pad id = n_seg_pad, outside every output block), the segment
+    count padded to a block_n multiple, and the static per-block chunk-span
+    bound the kernel needs under jit.  Everything here is eager numpy — call
+    it once at plan-build time, then feed the jitted hot loop.
+    """
+    ids = np.asarray(ids, np.int32)
+    n_seg_pad = -(-max(n_segments, 1) // block_n) * block_n
+    E = ids.shape[0]
+    E_pad = -(-max(E, 1) // chunk_e) * chunk_e
+    ids_padded = np.full(E_pad, n_seg_pad, np.int32)
+    ids_padded[:E] = ids
+    # same intersection logic as segment_sum_sorted, concretely
+    bounds_lo = np.arange(n_seg_pad // block_n, dtype=np.int64) * block_n
+    chunk_first = ids_padded[::chunk_e]
+    chunk_last = ids_padded[chunk_e - 1::chunk_e]
+    c0 = np.searchsorted(chunk_last, bounds_lo, side="left")
+    c1 = np.searchsorted(chunk_first, bounds_lo + block_n, side="left")
+    max_chunks = max(int(np.max(np.maximum(c1 - c0, 0), initial=0)), 1)
+    return ids_padded, n_seg_pad, max_chunks
+
+
 def _segsum_kernel(chunk0_ref, nchunks_ref, ids_ref, data_ref, out_ref,
                    acc_ref, *, block_n: int, chunk_e: int, max_chunks: int):
     i = pl.program_id(0)   # output block

@@ -19,7 +19,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import get_arch, all_archs, ArchSpec, ShapeCell
-from repro.core.distributed import PeelSchedule, make_sharded_decomposition
+from repro.core.distributed import make_sharded_decomposition
 from repro.distributed import sharding as shard_rules
 from repro.launch import steps as S
 from repro.launch.mesh import make_production_mesh
@@ -212,16 +212,17 @@ def lower_cell(spec: ArchSpec, cell: ShapeCell, mesh: Mesh,
             lowered = jfn.lower(params_a, opt_a, specs["batch"])
 
     elif spec.family == "core":
+        from repro.configs.nucleus import make_peel_schedule, max_rounds_bound
         d = cell.dims
         n_dev = int(np.prod(mesh.devices.shape))
         n_s_pad = -(-d["n_s"] // n_dev) * n_dev
-        sched = PeelSchedule(kind="approx", s_choose_r=d["C"], delta=0.1,
-                             n=d["n"])
-        # bound the while_loop trip count to the approx-schedule bound
-        max_rounds = 64 * int(np.ceil(np.log(d["n"]) ** 2))
+        cfg = spec.make_config()
+        cfg.update(opt_overrides or {})
+        sched = make_peel_schedule(cfg, cell)
         fn, in_sh, out_sh = make_sharded_decomposition(
-            mesh, d["n_r"], n_s_pad, d["C"], sched, max_rounds=max_rounds,
-            compress=bool((opt_overrides or {}).get("compress", False)))
+            mesh, d["n_r"], n_s_pad, d["C"], sched,
+            max_rounds=max_rounds_bound(cfg, cell),
+            compress=bool(cfg.get("compress", False)))
         jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
         lowered = jfn.lower(
             jax.ShapeDtypeStruct((n_s_pad, d["C"]), jnp.int32),

@@ -1,0 +1,134 @@
+"""Parity of the compiled peel engine against every other formulation.
+
+The unified engine (repro.core.engine) must be *bit-identical* to the eager
+work-efficient gather backend — same cores, same trace (order_round), same
+round count — because both are driven by the one PeelSchedule; and the trace
+replay must reproduce the callback-era interleaved hierarchy (join levels are
+the canonical comparison metric, matching the two-phase ANH-TE tree which
+the seed interleaved tests already pin down).
+"""
+import numpy as np
+import pytest
+
+from repro.graph import generators
+from repro.core import (build_problem, exact_coreness, approx_coreness,
+                        build_hierarchy_levels, build_hierarchy_interleaved,
+                        nh_coreness, replay_trace, construct_tree_efficient)
+
+GRAPHS = {
+    "er30": generators.erdos_renyi(30, 0.25, seed=2),
+    "planted": generators.planted_cliques(40, [8, 6, 5], 0.05, seed=3),
+    "ba60": generators.barabasi_albert(60, 4, seed=4),
+    "fig1": generators.paper_figure1_like(),
+}
+RS = [(1, 2), (2, 3), (2, 4)]
+
+
+def problems():
+    for gname in GRAPHS:
+        for (r, s) in RS:
+            yield pytest.param(gname, r, s, id=f"{gname}-r{r}s{s}")
+
+
+def _sample_pairs(n_r, seed, k=60):
+    rng = np.random.default_rng(seed)
+    if n_r < 2:
+        return np.zeros((0, 2), np.int64)
+    return np.stack([rng.integers(0, n_r, k), rng.integers(0, n_r, k)], 1)
+
+
+@pytest.mark.parametrize("gname,r,s", problems())
+def test_engine_exact_matches_gather_and_oracle(gname, r, s):
+    p = build_problem(GRAPHS[gname], r, s)
+    if p.n_r == 0:
+        pytest.skip("no r-cliques")
+    eng = exact_coreness(p, backend="dense")
+    gat = exact_coreness(p, backend="gather")
+    oracle, _ = nh_coreness(p)
+    np.testing.assert_array_equal(np.asarray(eng.core), oracle)
+    np.testing.assert_array_equal(np.asarray(eng.core), np.asarray(gat.core))
+    # the trace is part of the contract: identical schedules -> identical
+    # peel rounds, so the hierarchy replay sees the same round stream
+    np.testing.assert_array_equal(np.asarray(eng.order_round),
+                                  np.asarray(gat.order_round))
+    assert eng.rounds == gat.rounds
+
+
+@pytest.mark.parametrize("delta", [0.1, 0.5, 1.0])
+@pytest.mark.parametrize("gname,r,s", problems())
+def test_engine_approx_matches_gather_and_bounds(gname, r, s, delta):
+    from math import comb
+    p = build_problem(GRAPHS[gname], r, s)
+    if p.n_r == 0:
+        pytest.skip("no r-cliques")
+    eng = approx_coreness(p, delta=delta, backend="dense")
+    gat = approx_coreness(p, delta=delta, backend="gather")
+    np.testing.assert_array_equal(np.asarray(eng.core), np.asarray(gat.core))
+    np.testing.assert_array_equal(np.asarray(eng.peel_value),
+                                  np.asarray(gat.peel_value))
+    np.testing.assert_array_equal(np.asarray(eng.order_round),
+                                  np.asarray(gat.order_round))
+    exact = np.asarray(exact_coreness(p).core)
+    a = np.asarray(eng.core)
+    factor = (comb(s, r) + delta) * (1 + delta)
+    assert (a >= exact).all()
+    assert (a <= np.maximum(np.ceil(factor * exact), exact)).all()
+
+
+@pytest.mark.parametrize("gname,r,s", problems())
+def test_pallas_scatter_matches_xla_fallback(gname, r, s):
+    """The Pallas sorted-segment-sum decrement (interpret mode on CPU) must
+    agree with the .at[].add oracle over the full peel."""
+    p = build_problem(GRAPHS[gname], r, s)
+    if p.n_r == 0:
+        pytest.skip("no r-cliques")
+    ref = exact_coreness(p, backend="dense", use_pallas=False)
+    pal = exact_coreness(p, backend="dense", use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(ref.core), np.asarray(pal.core))
+    np.testing.assert_array_equal(np.asarray(ref.order_round),
+                                  np.asarray(pal.order_round))
+
+
+@pytest.mark.parametrize("backend", ["gather", "dense"])
+@pytest.mark.parametrize("gname,r,s", problems())
+def test_trace_replay_hierarchy_matches_two_phase(gname, r, s, backend):
+    """Trace-replay ANH-EL == callback-era join levels.  The seed pinned the
+    callback-era tree to the two-phase ANH-TE tree, so TE join levels are the
+    callback-era reference."""
+    p = build_problem(GRAPHS[gname], r, s)
+    if p.n_r == 0:
+        pytest.skip("no r-cliques")
+    res = build_hierarchy_interleaved(p, mode="exact", backend=backend)
+    core = exact_coreness(p).core
+    np.testing.assert_array_equal(np.asarray(res.core), np.asarray(core))
+    t_te = build_hierarchy_levels(p, core)
+    pairs = _sample_pairs(p.n_r, seed=7)
+    np.testing.assert_array_equal(res.tree.join_levels(pairs),
+                                  t_te.join_levels(pairs))
+
+
+@pytest.mark.parametrize("gname,r,s", problems())
+def test_trace_replay_equals_direct_replay(gname, r, s):
+    """replay_trace over the dense-engine trace and over the gather trace
+    build identical LINK states (same uf partition, same join levels)."""
+    p = build_problem(GRAPHS[gname], r, s)
+    if p.n_r == 0:
+        pytest.skip("no r-cliques")
+    st_e = replay_trace(p, exact_coreness(p, backend="dense"))
+    st_g = replay_trace(p, exact_coreness(p, backend="gather"))
+    t_e = construct_tree_efficient(p, st_e)
+    t_g = construct_tree_efficient(p, st_g)
+    pairs = _sample_pairs(p.n_r, seed=11)
+    np.testing.assert_array_equal(t_e.join_levels(pairs),
+                                  t_g.join_levels(pairs))
+
+
+def test_engine_empty_problem():
+    """A graph with no s-cliques: engine returns deg0 (all zero) cores."""
+    g = generators.tiny_named("path4")
+    p = build_problem(g, 2, 4)  # path has no K4s
+    if p.n_r == 0:
+        pytest.skip("no r-cliques")
+    res = exact_coreness(p, backend="dense")
+    np.testing.assert_array_equal(np.asarray(res.core),
+                                  np.zeros(p.n_r, np.int64))

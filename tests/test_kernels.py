@@ -127,6 +127,7 @@ def test_segment_sum_skewed_degrees():
 
 
 def test_segment_sum_hypothesis():
+    pytest.importorskip("hypothesis")  # optional dep: skip, don't fail
     from hypothesis import given, settings, strategies as st
 
     @settings(max_examples=20, deadline=None)

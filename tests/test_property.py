@@ -1,6 +1,8 @@
 """Hypothesis property tests on the system's invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't abort collection
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.graph import generators, make_graph, connected_components, INT
