@@ -2,15 +2,28 @@
 # eager-loop regression class (host-synced peel rounds) is caught
 # mechanically — a hung or quadratically-slow suite fails, not stalls.
 VERIFY_BUDGET ?= 2400
+FAST_BUDGET ?= 1800
 
-.PHONY: verify bench quick-bench
+.PHONY: verify verify-fast bench quick-bench regen-golden
 
 verify:
 	JAX_PLATFORMS=cpu PYTHONPATH=src timeout $(VERIFY_BUDGET) \
 		python -m pytest -x -q
+
+# the push lane: everything not marked slow (no subprocess meshes, no
+# hypothesis fuzzing) — CI runs this on every push, the full suite in a
+# second job
+verify-fast:
+	JAX_PLATFORMS=cpu PYTHONPATH=src timeout $(FAST_BUDGET) \
+		python -m pytest -x -q -m "not slow"
 
 bench:
 	JAX_PLATFORMS=cpu PYTHONPATH=src python -m benchmarks.run
 
 quick-bench:
 	JAX_PLATFORMS=cpu PYTHONPATH=src python -m benchmarks.run --quick
+
+# rewrite tests/golden/*.json from the oracle-pinned gather+replay path;
+# the JSON diff is the review artifact for any intentional semantic change
+regen-golden:
+	JAX_PLATFORMS=cpu PYTHONPATH=src python tools/regen_golden.py

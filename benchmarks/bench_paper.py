@@ -241,6 +241,47 @@ def engine_lane(quick=False) -> list[str]:
     return rows
 
 
+def hierarchy_lane(quick=False) -> list[str]:
+    """On-device hierarchy construction: the fused engine (coreness + LINK
+    fixpoint in ONE jitted call) vs host trace-replay vs the two-phase
+    ANH-TE build — the repo's analog of the paper's hierarchy-construction
+    comparison (Shi et al. report 58.84x over sequential there).  All
+    lanes are end-to-end (peel + hierarchy); compile time excluded via
+    warmup on the compiled lanes."""
+    rows = []
+    graphs = suite(["ba2k"] if quick else ["ba2k", "ba4k"])
+    rs = [(1, 2), (2, 3)]
+    for gname, g in graphs.items():
+        for (r, s) in rs:
+            problem = build_problem(g, r, s)
+            if problem.n_r == 0:
+                continue
+            for mode in ("exact", "approx"):
+                res_f, t_fused = timed(lambda: build_hierarchy_interleaved(
+                    problem, mode=mode, backend="dense", link="fused"),
+                    warmup=1)
+                _, t_replay = timed(lambda: build_hierarchy_interleaved(
+                    problem, mode=mode, backend="dense", link="replay"),
+                    warmup=1)
+
+                def two_phase():
+                    core = (exact_coreness(problem, backend="dense")
+                            if mode == "exact" else
+                            approx_coreness(problem, backend="dense")).core
+                    return build_hierarchy_levels(problem, core)
+
+                _, t_two = timed(two_phase, warmup=1)
+                base = f"hierarchy/{gname}/r{r}s{s}/{mode}"
+                rows.append(row(f"{base}/fused", t_fused,
+                                f"vs_replay={t_replay / max(t_fused, 1e-9):.2f}x;"
+                                f"vs_two_phase={t_two / max(t_fused, 1e-9):.2f}x;"
+                                f"rounds={res_f.rounds}"))
+                rows.append(row(f"{base}/host_replay", t_replay,
+                                f"n_r={problem.n_r};n_s={problem.n_s}"))
+                rows.append(row(f"{base}/two_phase", t_two, ""))
+    return rows
+
+
 ALL = {
     "fig6": fig6_variants,
     "fig7": fig7_grid,
@@ -249,4 +290,5 @@ ALL = {
     "fig10": fig10_nuclei,
     "approx": approx_quality,
     "engine": engine_lane,
+    "hierarchy": hierarchy_lane,
 }

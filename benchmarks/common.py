@@ -19,6 +19,7 @@ _SUITE: Dict[str, Callable[[], Graph]] = {
     "er2k": lambda: generators.erdos_renyi_sparse(2_000, 16_000, seed=2),
     "planted1k": lambda: generators.planted_cliques(
         1_000, [24, 18, 14, 10], 0.01, seed=3),
+    "ba4k": lambda: generators.barabasi_albert(4_000, 8, seed=7),
     "ba5k": lambda: generators.barabasi_albert(5_000, 6, seed=4),
 }
 

@@ -1,18 +1,26 @@
 """Benchmark driver: one bench per paper table/figure + the roofline table.
 
-`python -m benchmarks.run [--quick] [--only fig6,fig9]` prints
-`name,us_per_call,derived` CSV rows, then the roofline table if dry-run
-artifacts exist.
+`python -m benchmarks.run [--quick] [--only fig6,fig9] [--json out.json]`
+prints `name,us_per_call,derived` CSV rows, then the roofline table if
+dry-run artifacts exist; `--json` additionally writes the rows as a JSON
+artifact (what the CI bench job uploads).
 
 The `engine` lane (and the engine rows inside fig8) time the compiled
 `lax.while_loop` peel engine against the eager dense round loop it replaced;
-compile time is excluded via a warmup call, so the rows measure steady-state
-wall-clock (what EXPERIMENTS.md records).
+the `hierarchy` lane times fused-on-device ANH-EL against host trace-replay
+and the two-phase build.  Compile time is excluded via a warmup call, so
+the rows measure steady-state wall-clock (what EXPERIMENTS.md records).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+
+
+def _parse_row(row: str) -> dict:
+    name, us, derived = row.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
 
 
 def main() -> None:
@@ -24,6 +32,8 @@ def main() -> None:
     ap.add_argument("--list", action="store_true",
                     help="list available benches and exit")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--json", default="",
+                    help="also write rows to this path as a JSON artifact")
     args = ap.parse_args()
 
     from . import bench_paper
@@ -33,6 +43,7 @@ def main() -> None:
             print(f"{name}: {doc}")
         return
     only = set(filter(None, args.only.split(",")))
+    collected = []
     print("name,us_per_call,derived")
     for name, fn in bench_paper.ALL.items():
         if only and name not in only:
@@ -40,8 +51,16 @@ def main() -> None:
         try:
             for r in fn(quick=args.quick):
                 print(r, flush=True)
+                collected.append(_parse_row(r))
         except Exception as e:  # keep the suite running
             print(f"{name}/ERROR,0,{e!r}", flush=True)
+            collected.append({"name": f"{name}/ERROR", "us_per_call": 0.0,
+                              "derived": repr(e)})
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": collected}, f, indent=1)
+            f.write("\n")
 
     if not args.skip_roofline and not only:
         from . import roofline

@@ -15,20 +15,27 @@ Public surface:
                              (dense, distributed) shares; gather drives the
                              same schedule eagerly
   replay_trace             — LINK-EFFICIENT over the on-device peel trace
+                             (the host oracle for the fused fixpoint)
+  round_links / link_fixpoint — the fused on-device ANH-EL LINK state
+                             (hierarchy=True: coreness + join forest in one
+                             jitted call; DESIGN.md §5)
 """
 from .incidence import NucleusProblem, build_problem
 from .schedule import PeelSchedule
 from .engine import (peel_round, run_peel_engine, dense_coreness,
-                     make_schedule, scatter_decrement)
+                     make_schedule, scatter_decrement, round_links,
+                     link_fixpoint)
 from .peel import PeelResult, exact_coreness, approx_coreness
 from .hierarchy import (HierarchyTree, build_hierarchy_levels,
                         build_hierarchy_basic, hierarchy_edges)
 from .interleaved import (LinkState, InterleavedResult,
                           build_hierarchy_interleaved,
-                          construct_tree_efficient, replay_trace)
+                          construct_tree_efficient, replay_trace,
+                          link_state_from_forest)
 from .nh_baseline import (nh_coreness, nh_hierarchy, nh_full,
                           brute_force_coreness)
 from .nuclei import (cut_hierarchy, nuclei_without_hierarchy,
-                     nucleus_vertex_sets, edge_density, same_partition)
+                     nucleus_vertex_sets, edge_density, same_partition,
+                     canonicalize_labels)
 from .distributed import (sharded_decomposition,
                           make_sharded_decomposition, pad_incidence)

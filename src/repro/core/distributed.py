@@ -64,12 +64,13 @@ def pad_incidence(inc_rid: jnp.ndarray, n_shards: int):
 def make_sharded_decomposition(mesh: Mesh, n_r: int, n_s_padded: int, C: int,
                                schedule: PeelSchedule,
                                max_rounds: Optional[int] = None,
-                               compress: bool = False):
+                               compress: bool = False,
+                               hierarchy: bool = False):
     """Build the jittable distributed decomposition for a mesh.
 
     Returns (fn, in_shardings, out_shardings); fn(inc_rid, deg0) -> (core,
-    rounds).  inc_rid is sharded over all mesh axes (s-clique partition),
-    state is replicated.
+    rounds) — or (core, rounds, parent, L) with hierarchy=True.  inc_rid is
+    sharded over all mesh axes (s-clique partition), state is replicated.
 
     compress=True: the (n_r,) int32 delta all-reduce is sent as int16 with
     per-shard saturation + ERROR FEEDBACK — the saturated remainder stays in
@@ -78,6 +79,15 @@ def make_sharded_decomposition(mesh: Mesh, n_r: int, n_s_padded: int, C: int,
     destroyed incidence is eventually counted exactly (peel levels are
     monotone, so late decrements only delay a peel, never mis-assign a
     core).  Halves the per-round collective bytes (the dominant term).
+
+    hierarchy=True fuses the ANH-EL LINK state into the same loop: each
+    round's links are generated from the device-local s-clique slab
+    (``engine.round_links``; ghost rows emit nothing, last_peeled stays
+    device-local), all-gathered so every device sees the round's global
+    link multiset, and folded into the REPLICATED (parent, L) carry by the
+    same ``engine.link_fixpoint`` the dense backend runs — value-identical
+    on every device, so the emitted forest equals the single-device fused
+    forest exactly.
     """
     axis_names = tuple(mesh.axis_names)
     shard_spec = P(axis_names)      # all axes partition the s-clique dim
@@ -97,40 +107,78 @@ def make_sharded_decomposition(mesh: Mesh, n_r: int, n_s_padded: int, C: int,
             delta = jax.lax.psum(delta, ax)
         return delta, resid
 
+    def gather_links(la, lb, lv):
+        for ax in axis_names:
+            la = jax.lax.all_gather(la, ax, tiled=True)
+            lb = jax.lax.all_gather(lb, ax, tiled=True)
+            lv = jax.lax.all_gather(lv, ax, tiled=True)
+        return la, lb, lv
+
+    def replicate(x):
+        # parent/L are value-identical across devices (every device folded
+        # the same gathered multiset); pmax is an identity that re-types
+        # them replicated so out_specs=P() checks under VMA tracking
+        for ax in axis_names:
+            x = jax.lax.pmax(x, ax)
+        return x
+
     def local_fn(inc_local, deg0):
         # alive/residual are per-shard state: mark them device-varying so
         # the engine's while_loop carry types match (shard_map VMA tracking)
-        alive0 = _pvary(jnp.ones((inc_local.shape[0],), bool), axis_names)
+        n_s_local = inc_local.shape[0]
+        alive0 = _pvary(jnp.ones((n_s_local,), bool), axis_names)
         resid0 = _pvary(
             jnp.zeros((n_r,) if compress else (1,), INT), axis_names)
+        if hierarchy:
+            link0 = (_pvary(jnp.arange(n_r, dtype=INT), axis_names),
+                     _pvary(jnp.full((n_r,), -1, INT), axis_names),
+                     _pvary(jnp.full((n_s_local,), -1, INT), axis_names))
+            core, _order, rounds, parent, L = run_peel_engine(
+                inc_local, deg0, schedule, max_rounds=cap_rounds,
+                reduce_delta=reduce_delta, resid0=resid0, alive0=alive0,
+                hierarchy=True, link0=link0, gather_links=gather_links)
+            return core, rounds, replicate(parent), replicate(L)
         core, _order, rounds = run_peel_engine(
             inc_local, deg0, schedule, max_rounds=cap_rounds,
             reduce_delta=reduce_delta, resid0=resid0, alive0=alive0)
         return core, rounds
 
+    n_out = 4 if hierarchy else 2
     fn = _shard_map(local_fn, mesh=mesh,
                     in_specs=(shard_spec, repl_spec),
-                    out_specs=(repl_spec, repl_spec))
+                    out_specs=(repl_spec,) * n_out)
     in_sh = (NamedSharding(mesh, shard_spec), NamedSharding(mesh, repl_spec))
-    out_sh = (NamedSharding(mesh, repl_spec), NamedSharding(mesh, repl_spec))
+    out_sh = (NamedSharding(mesh, repl_spec),) * n_out
     return fn, in_sh, out_sh
 
 
 def sharded_decomposition(problem: NucleusProblem, mesh: Mesh,
                           kind: str = "exact", delta: float = 0.1,
                           max_rounds: Optional[int] = None,
-                          compress: bool = False):
-    """Run the distributed decomposition end-to-end on real data."""
+                          compress: bool = False, hierarchy: bool = False):
+    """Run the distributed decomposition end-to-end on real data.
+
+    Returns (core, rounds); with hierarchy=True, (core, rounds, parent, L,
+    peel_value) — the fused ANH-EL join forest, identical to the
+    single-device fused forest, plus the raw (unclipped) peel values it was
+    built over: ``link_state_from_forest(peel_value, parent, L)`` is the
+    tree-building input, NOT the clipped approx estimates in ``core``.
+    """
     n_dev = int(np.prod(mesh.devices.shape))
     inc, n_s_pad = pad_incidence(problem.inc_rid, n_dev)
     schedule = PeelSchedule(kind=kind, s_choose_r=comb(problem.s, problem.r),
                             delta=delta, n=problem.g.n)
     fn, _, _ = make_sharded_decomposition(mesh, problem.n_r, n_s_pad,
                                           problem.n_sub, schedule, max_rounds,
-                                          compress=compress)
-    core, rounds = jax.jit(fn)(inc, problem.deg0)
+                                          compress=compress,
+                                          hierarchy=hierarchy)
+    out = jax.jit(fn)(inc, problem.deg0)
+    core, rounds = out[0], out[1]
+    raw = core
     if kind == "approx":  # practical tightening (paper §6)
         core = jnp.minimum(core, problem.deg0)
+    if hierarchy:
+        return core, int(rounds), out[2], out[3], raw
     return core, int(rounds)
 
 

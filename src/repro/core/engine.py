@@ -24,6 +24,15 @@ two implementations: XLA ``.at[].add`` (the interpret/oracle fallback, and
 the default off-TPU) and a Pallas sorted-segment-sum over the CSR edge array
 (``kernels.segment_sum``), whose one-hot contraction runs on the MXU instead
 of serialized scatter-adds.
+
+With ``hierarchy=True`` the engine additionally threads the ANH-EL LINK
+state (same-core union-find ``parent``, nearest-lower-core table ``L``,
+per-s-clique ``last_peeled`` representative) through the while_loop carry:
+each round materializes its chain-reduced link multiset (``round_links``)
+and converges it with a batched fixpoint (``link_fixpoint``) — so ONE
+compiled call returns coreness *and* the join forest, with the host trace
+replay (``interleaved.replay_trace``) kept as the cross-check oracle.
+DESIGN.md §5 has the carry layout and the termination argument.
 """
 from __future__ import annotations
 
@@ -37,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph import INT
+from ..graph.unionfind import uf_union_edges
 from ..kernels.segment_sum import (DEFAULT_BLOCK_N, DEFAULT_CHUNK_E,
                                    segment_sum_sorted, sorted_ids_plan)
 from .incidence import NucleusProblem
@@ -75,6 +85,140 @@ def scatter_decrement(inc_rid: jnp.ndarray, dead_now: jnp.ndarray,
     return jnp.zeros((n_r,), INT).at[members].add(valid.astype(INT))
 
 
+# ---------------------------------------------------------------------------
+# Fused ANH-EL link state (DESIGN.md §5): fixed-shape link generation + the
+# batched LINK-EFFICIENT fixpoint, pure jnp so it nests inside the peel loop.
+# ---------------------------------------------------------------------------
+
+def round_links(inc_rid, a_mask, last_peeled):
+    """Chain-reduced ANH-EL link multiset for one peel round, fixed shape.
+
+    Per s-clique row: members peeled this round (A ∩ S) are moved to the
+    front by a stable sort and linked consecutively (the chain reduction of
+    DESIGN.md §3); the chain head additionally hooks to the s-clique's
+    previously peeled representative.  Matches ``interleaved._round_links``
+    link-for-link, but emitted densely over all rows with a validity mask —
+    untouched rows (no A-member) contribute nothing and keep last_peeled.
+
+    Returns (la, lb, lvalid) of shape (n_s * C,) and the updated
+    last_peeled.  Ghost rows (inc_rid < 0, distributed padding) never emit.
+    """
+    n_s, C = inc_rid.shape
+    n_r = a_mask.shape[0]
+    am = (inc_rid >= 0) & a_mask[jnp.clip(inc_rid, 0, n_r - 1)]
+    order = jnp.argsort(~am, axis=1, stable=True)
+    mem_s = jnp.take_along_axis(inc_rid, order, axis=1)
+    am_s = jnp.take_along_axis(am, order, axis=1)
+    cnt = am_s.sum(axis=1)
+    # chain: A-members are a prefix after the sort, link consecutive pairs
+    chain_valid = am_s[:, 1:]
+    # head of each chain hooks to the previous representative of S (if any)
+    head = mem_s[:, 0]
+    prev = last_peeled
+    head_valid = (prev >= 0) & (cnt > 0)
+    last_peeled = jnp.where(cnt > 0, head, last_peeled)
+    la = jnp.concatenate([mem_s[:, :-1].reshape(-1), prev])
+    lb = jnp.concatenate([mem_s[:, 1:].reshape(-1), head])
+    lvalid = jnp.concatenate([chain_valid.reshape(-1), head_valid])
+    return la, lb, lvalid, last_peeled
+
+
+def link_fixpoint(parent, L, core, la, lb, lvalid, *, max_gens: int):
+    """Batched LINK-EFFICIENT fixpoint over one round's links, pure jnp.
+
+    The numpy worklist (``interleaved.LinkState.process_links``) with fixed
+    shapes: the worklist has K + n_r slots (K initial links; one handoff
+    slot per r-clique).  Each generation
+
+      1. resolves + orients every link so core[a] <= core[b];
+      2. unions same-core links with min-hooking (``uf_union_edges``, dead
+         slots masked to self-edges), keeping ``parent`` fully resolved;
+      3. roots absorbed by the union hand their L off as a fresh link in
+         their node's handoff slot (each node loses root status at most
+         once ever, so the slot is collision-free);
+      4. lower-core links compete for L[target] by (max core, min id) via a
+         two-pass scatter; every losing candidate re-links against the
+         winner *in place* (slot i's successor overwrites slot i), and the
+         ousted previous L re-links from the winning slot.
+
+    Final (parent, L) is the same resolved state the host replay computes:
+    min-hooking and the (max core, min id) winner rule are confluent, so the
+    result depends only on the link multiset, not on slot order.  Progress
+    argument (DESIGN.md §5): unions are bounded by n_r - 1 and every
+    surviving successor strictly lowers core[target], so max_gens = O(n_r)
+    generations suffice; the cap is a lowering bound, never binding.
+    """
+    n_r = parent.shape[0]
+    K = la.shape[0]
+    W = K + n_r
+    node = jnp.arange(n_r, dtype=INT)
+    idx = jnp.arange(W, dtype=INT)
+    zpad = jnp.zeros((n_r,), INT)
+    wa = jnp.concatenate([la, zpad])
+    wb = jnp.concatenate([lb, zpad])
+    wv = jnp.concatenate([lvalid, jnp.zeros((n_r,), bool)])
+
+    def cond(st):
+        _, _, _, _, wv, gen = st
+        return jnp.any(wv) & (gen < max_gens)
+
+    def body(st):
+        parent, L, wa, wb, wv, gen = st
+        # resolve (parent is fully resolved: one gather) and orient
+        a = parent[jnp.clip(wa, 0, n_r - 1)]
+        b = parent[jnp.clip(wb, 0, n_r - 1)]
+        swap = core[a] > core[b]
+        a, b = jnp.where(swap, b, a), jnp.where(swap, a, b)
+        wv = wv & (a != b)
+        eq = wv & (core[a] == core[b])
+        # -- same-core union: min-hooking seeded by the current forest
+        parent = uf_union_edges(parent, jnp.where(eq, a, 0),
+                                jnp.where(eq, b, 0))
+        # -- losers (roots absorbed just now) hand their L to the new root
+        lost = (L >= 0) & (parent != node)
+        Lc = jnp.where(lost, -1, L)
+        # -- lower-core links install into L by (max core, min id)
+        lt = wv & ~eq
+        a = parent[a]  # roots may have moved in the union step
+        b = parent[b]
+        tgt = jnp.where(lt, b, n_r)          # slot n_r = dummy row
+        cv = jnp.where(lt, a, 0)
+        Lval = jnp.clip(Lc, 0, n_r - 1)
+        Lhas = Lc >= 0
+        best_core = (jnp.full((n_r + 1,), -1, INT)
+                     .at[tgt].max(jnp.where(lt, core[cv], -1))
+                     .at[jnp.where(Lhas, node, n_r)]
+                     .max(jnp.where(Lhas, core[Lval], -1)))
+        is_best = lt & (core[cv] == best_core[tgt])
+        old_best = Lhas & (core[Lval] == best_core[:n_r])
+        best_id = (jnp.full((n_r + 1,), BIG, INT)
+                   .at[jnp.where(is_best, tgt, n_r)]
+                   .min(jnp.where(is_best, cv, BIG))
+                   .at[jnp.where(old_best, node, n_r)]
+                   .min(jnp.where(old_best, Lval, BIG)))
+        newL = jnp.where(best_id[:n_r] < BIG, best_id[:n_r], Lc)
+        # -- successors: losing candidates re-link against their winner
+        w_t = best_id[tgt]
+        is_win = lt & (cv == w_t)
+        rep = (jnp.full((n_r + 1,), W, INT)
+               .at[jnp.where(is_win, tgt, n_r)]
+               .min(jnp.where(is_win, idx, W)))
+        host = is_win & (idx == rep[tgt])
+        succ_a = jnp.where(host, Lc[jnp.clip(tgt, 0, n_r - 1)], cv)
+        succ_v = lt & (succ_a >= 0) & (succ_a != w_t)
+        na = jnp.where(succ_v, succ_a, 0)
+        nb = jnp.where(succ_v, w_t, 0)
+        # -- handoff slots: node j's slot is K + j (free until j loses)
+        wa = jnp.concatenate([na[:K], jnp.where(lost, L, na[K:])])
+        wb = jnp.concatenate([nb[:K], jnp.where(lost, parent, nb[K:])])
+        wv = jnp.concatenate([succ_v[:K], succ_v[K:] | lost])
+        return parent, newL, wa, wb, wv, gen + 1
+
+    parent, L, _, _, _, _ = jax.lax.while_loop(
+        cond, body, (parent, L, wa, wb, wv, jnp.zeros((), INT)))
+    return parent, L
+
+
 def peel_round(inc_rid, deg, peeled, s_alive, core, order_round, sched,
                rounds, schedule: PeelSchedule, *,
                reduce_delta: Optional[Callable] = None, resid=None,
@@ -88,7 +232,9 @@ def peel_round(inc_rid, deg, peeled, s_alive, core, order_round, sched,
 
     reduce_delta(delta, resid) -> (delta, resid) is the distributed
     all-reduce hook (identity when None); scatter(dead_now) -> (n_r,) delta
-    overrides the decrement implementation (Pallas path).
+    overrides the decrement implementation (Pallas path).  The round's
+    peeled set a_mask is returned so the fused hierarchy path can generate
+    its links without recomputing the bucket.
     """
     n_r = deg.shape[0]
     live_deg = jnp.where(peeled, BIG, deg)
@@ -109,47 +255,87 @@ def peel_round(inc_rid, deg, peeled, s_alive, core, order_round, sched,
         delta, resid = reduce_delta(delta, resid)
     # peeled cliques keep deg frozen (their core is already assigned)
     deg = jnp.where(peeled, deg, deg - delta)
-    return deg, peeled, s_alive, core, order_round, sched, resid
+    return deg, peeled, s_alive, core, order_round, sched, resid, a_mask
 
 
 def run_peel_engine(inc_rid, deg0, schedule: PeelSchedule, *,
                     max_rounds: int,
                     reduce_delta: Optional[Callable] = None,
                     resid0=None, alive0=None,
-                    scatter: Optional[Callable] = None):
+                    scatter: Optional[Callable] = None,
+                    hierarchy: bool = False, link0=None,
+                    gather_links: Optional[Callable] = None):
     """Drive ``peel_round`` to a fixpoint under one ``lax.while_loop``.
 
     Returns (core, order_round, rounds): raw bucket values per r-clique, the
     on-device peel trace, and the round count.  Every round peels at least
     one clique (the schedule guarantees level >= dmin), so the loop runs at
     most n_r rounds; max_rounds is a static safety cap for lowering.
+
+    hierarchy=True additionally threads the fused ANH-EL state through the
+    carry and appends (parent, L) — the resolved same-core join forest — to
+    the return: one compiled call yields coreness AND hierarchy.  link0
+    overrides the initial (parent, L, last_peeled) triple (the distributed
+    backend passes device-varying-marked arrays); gather_links(la, lb,
+    lvalid) all-gathers each round's locally generated links so the
+    replicated link state sees the global multiset.
     """
     n_r = deg0.shape[0]
     core0 = jnp.full((n_r,), -1, INT)
     order0 = jnp.full((n_r,), -1, INT)
     if n_r == 0:
+        if hierarchy:
+            empty = jnp.zeros((0,), INT)
+            return core0, order0, jnp.zeros((), INT), empty, empty
         return core0, order0, jnp.zeros((), INT)
     peeled0 = jnp.zeros((n_r,), bool)
     if alive0 is None:
         alive0 = jnp.ones((inc_rid.shape[0],), bool)
     if resid0 is None:
         resid0 = jnp.zeros((1,), INT)
+    if hierarchy and link0 is None:
+        link0 = (jnp.arange(n_r, dtype=INT), jnp.full((n_r,), -1, INT),
+                 jnp.full((inc_rid.shape[0],), -1, INT))
+    if not hierarchy:
+        link0 = ()
     sched0 = schedule.init_carry()
     rounds0 = jnp.zeros((), INT)
+    # every generation consumes one of three finite budgets — a union
+    # (≤ n_r - 1 total), a handoff re-entry (≤ 1 per node), or a relink
+    # whose target core strictly drops (≤ n_r distinct values per chain) —
+    # so 3·n_r generations always suffice; the cap is a static lowering
+    # bound for the while_loop, never binding
+    max_gens = 3 * n_r + 4
 
     def cond(carry):
-        _, peeled, _, _, _, _, rounds, _ = carry
+        peeled, rounds = carry[1], carry[6]
         return (~jnp.all(peeled)) & (rounds < max_rounds)
 
     def body(carry):
-        deg, peeled, alive, core, order, sched, rounds, resid = carry
-        deg, peeled, alive, core, order, sched, resid = peel_round(
+        deg, peeled, alive, core, order, sched, rounds, resid = carry[:8]
+        deg, peeled, alive, core, order, sched, resid, a_mask = peel_round(
             inc_rid, deg, peeled, alive, core, order, sched, rounds,
             schedule, reduce_delta=reduce_delta, resid=resid, scatter=scatter)
-        return deg, peeled, alive, core, order, sched, rounds + 1, resid
+        link = carry[8:]
+        # no s-cliques -> no links ever; also keeps all_gather away from
+        # zero-size operands (XLA rejects an empty all_gather dim)
+        if hierarchy and inc_rid.shape[0] > 0:
+            parent, L, last = link
+            la, lb, lv, last = round_links(inc_rid, a_mask, last)
+            if gather_links is not None:
+                la, lb, lv = gather_links(la, lb, lv)
+            parent, L = link_fixpoint(parent, L, core, la, lb, lv,
+                                      max_gens=max_gens)
+            link = (parent, L, last)
+        return (deg, peeled, alive, core, order, sched, rounds + 1,
+                resid) + link
 
-    carry = (deg0, peeled0, alive0, core0, order0, sched0, rounds0, resid0)
-    _, _, _, core, order, _, rounds, _ = jax.lax.while_loop(cond, body, carry)
+    carry = (deg0, peeled0, alive0, core0, order0, sched0, rounds0,
+             resid0) + tuple(link0)
+    out = jax.lax.while_loop(cond, body, carry)
+    core, order, rounds = out[3], out[4], out[6]
+    if hierarchy:
+        return core, order, rounds, out[8], out[9]
     return core, order, rounds
 
 
@@ -157,10 +343,11 @@ def run_peel_engine(inc_rid, deg0, schedule: PeelSchedule, *,
 # Single-device dense backend: jitted entry + Pallas scatter plan
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("schedule", "max_rounds", "spec"))
+@partial(jax.jit, static_argnames=("schedule", "max_rounds", "spec",
+                                   "hierarchy"))
 def _dense_engine(inc_rid, deg0, plan_rids, plan_sids, *,
                   schedule: PeelSchedule, max_rounds: int,
-                  spec: Optional[ScatterSpec]):
+                  spec: Optional[ScatterSpec], hierarchy: bool = False):
     n_r = deg0.shape[0]
     scatter = None
     if spec is not None:
@@ -173,7 +360,7 @@ def _dense_engine(inc_rid, deg0, plan_rids, plan_sids, *,
                                      interpret=spec.interpret)
             return out[:n_r, 0]
     return run_peel_engine(inc_rid, deg0, schedule, max_rounds=max_rounds,
-                           scatter=scatter)
+                           scatter=scatter, hierarchy=hierarchy)
 
 
 def _scatter_plan(problem: NucleusProblem, block_n: int, chunk_e: int,
@@ -211,13 +398,17 @@ def dense_coreness(problem: NucleusProblem, schedule: PeelSchedule, *,
                    max_rounds: Optional[int] = None,
                    block_n: int = DEFAULT_BLOCK_N,
                    chunk_e: int = DEFAULT_CHUNK_E,
-                   interpret: Optional[bool] = None):
+                   interpret: Optional[bool] = None,
+                   hierarchy: bool = False):
     """One jitted call: (core_raw, order_round, rounds) for the whole peel.
 
     use_pallas=None picks the Pallas scatter on TPU and the XLA scatter-add
     elsewhere (Pallas interpret mode is a correctness oracle, not a fast
     path).  Raw bucket values are returned — approx clipping is the
     caller's job so the trace keeps the values that drove LINK equality.
+
+    hierarchy=True fuses the ANH-EL link fixpoint into the same compiled
+    call and appends the join forest (parent, L) to the return tuple.
     """
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
@@ -230,7 +421,6 @@ def dense_coreness(problem: NucleusProblem, schedule: PeelSchedule, *,
         rids, sids, spec = _scatter_plan(problem, block_n, chunk_e, interpret)
     else:
         rids, sids, spec = dummy, dummy, None
-    core, order, rounds = _dense_engine(problem.inc_rid, problem.deg0,
-                                        rids, sids, schedule=schedule,
-                                        max_rounds=max_rounds, spec=spec)
-    return core, order, rounds
+    return _dense_engine(problem.inc_rid, problem.deg0, rids, sids,
+                         schedule=schedule, max_rounds=max_rounds, spec=spec,
+                         hierarchy=hierarchy)

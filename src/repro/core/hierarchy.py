@@ -13,6 +13,14 @@ TPU adaptation notes (see DESIGN.md §3):
     linked consecutively give identical per-level connectivity as all
     O(C^2) pairs with only C-1 edges (beyond-paper optimization; the
     all-pairs mode is kept for cross-validation).
+  * The connectivity substrate (``graph.connectivity``) is a fixed-carry
+    ``lax.while_loop`` (DESIGN.md §5): each per-level union here is one
+    device-resident dispatch with no per-round host sync, and the same
+    primitive runs *inside* the fused engine's peel loop.  These two-phase
+    builders stay host-driven over levels — they are the cross-check and
+    the Fig. 6 comparison baseline; the fused ANH-EL path
+    (``interleaved.build_hierarchy_interleaved(link="fused")``) is the
+    production one-call route.
 """
 from __future__ import annotations
 

@@ -22,6 +22,12 @@ reconstructs each round's peeled set A_t = {i : order_round[i] == t} post-hoc
 §"Engine"), so coreness stays one compiled call while the hierarchy output
 (join levels) is unchanged.
 
+The replay is now the *oracle* path: the same fixpoint also runs fused
+inside the compiled peel loop (``engine.round_links`` +
+``engine.link_fixpoint``, DESIGN.md §5), where one jitted call returns
+coreness and the join forest together; ``link_state_from_forest`` adapts
+that forest to the ``LinkState`` the tree post-pass consumes.
+
 Link-generation work matches ANH-EL's bound: per round, per incident s-clique,
 we emit O(|A ∩ S|) pairs — the chain reduction of DESIGN.md §3 — instead of
 all O(C^2) member pairs (connectivity-equivalent at every level; proven by the
@@ -30,6 +36,7 @@ prefix argument in DESIGN.md).
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Literal
 
 import numpy as np
@@ -193,6 +200,19 @@ class InterleavedResult:
     state: LinkState
 
 
+def link_state_from_forest(peel_value, uf_parent, uf_L) -> LinkState:
+    """Adapt the fused engine's on-device join forest to a ``LinkState``.
+
+    The engine returns (parent resolved, L) plus the raw peel values — the
+    exact arrays the host replay would have produced (engine.link_fixpoint
+    is confluent with ``process_links``), so the same tree post-pass
+    (``construct_tree_efficient``) applies unchanged.
+    """
+    return LinkState(parent=np.asarray(uf_parent).astype(np.int64),
+                     L=np.asarray(uf_L).astype(np.int64),
+                     core=np.asarray(peel_value).astype(np.int64))
+
+
 def construct_tree_efficient(problem: NucleusProblem,
                              state: LinkState) -> HierarchyTree:
     """CONSTRUCT-TREE-EFFICIENT (Alg. 5, Lines 28–36), fully batched."""
@@ -264,17 +284,28 @@ def build_hierarchy_interleaved(
         problem: NucleusProblem,
         mode: Literal["exact", "approx"] = "exact",
         delta: float = 0.1,
-        backend: Literal["gather", "dense"] = "gather") -> InterleavedResult:
-    """ANH-EL: one peel pass (trace recorded on device), one LINK replay,
-    one tree post-pass.  With backend="dense" the peel is a single jitted
-    call; LINK work is unchanged from the callback formulation."""
-    if mode == "exact":
-        res: PeelResult = exact_coreness(problem, backend=backend)
+        backend: Literal["gather", "dense"] = "gather",
+        link: Literal["replay", "fused"] = "replay") -> InterleavedResult:
+    """ANH-EL: one peel pass (trace recorded on device), LINK state, one
+    tree post-pass.
+
+    link="replay" rebuilds uf/L on the host from the recorded trace (the
+    oracle path); link="fused" runs the LINK fixpoint *inside* the compiled
+    peel (dense backend), so peel + hierarchy are one jitted call and only
+    the O(n_r) tree post-pass touches the host.  Both produce identical
+    forests (tests pin this); with backend="gather" the fused request falls
+    back to the replay (there is no compiled loop to fuse into)."""
+    peel = (exact_coreness if mode == "exact"
+            else partial(approx_coreness, delta=delta))
+    if link == "fused" and backend == "dense":
+        # NOTE: the forest (like the replay) is built over the unclipped
+        # bucket values; res.core carries the clipped estimates.
+        res: PeelResult = peel(problem, backend=backend, hierarchy=True)
+        state = link_state_from_forest(res.peel_value, res.uf_parent,
+                                       res.uf_L)
     else:
-        # NOTE: replay sees the (unclipped) bucket values that drove the
-        # LINK equality structure; res.core carries the clipped estimates.
-        res = approx_coreness(problem, delta=delta, backend=backend)
-    state = replay_trace(problem, res)
+        res = peel(problem, backend=backend)
+        state = replay_trace(problem, res)
     tree = construct_tree_efficient(problem, state)
     return InterleavedResult(core=res.core, tree=tree, rounds=res.rounds,
                              state=state)

@@ -22,6 +22,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Literal, Optional
 
+import numpy as np
 import jax.numpy as jnp
 
 from ..graph import INT
@@ -38,10 +39,17 @@ class PeelResult:
     peel_value: jnp.ndarray = None  # (n_r,) raw bucket value assigned at peel
     # time (pre-clipping) — the trace value LINK replay needs; == core
     # for exact peeling.
+    uf_parent: Optional[jnp.ndarray] = None  # (n_r,) resolved ANH-EL union-
+    uf_L: Optional[jnp.ndarray] = None       # find + nearest-lower-core table
+    # (hierarchy=True only) — the join forest of the fused LINK fixpoint.
 
     def __post_init__(self):
         if self.peel_value is None:
             self.peel_value = self.core
+
+    @property
+    def has_hierarchy(self) -> bool:
+        return self.uf_parent is not None
 
 
 def _gather_incident_sids(problem: NucleusProblem, a_ids: jnp.ndarray) -> jnp.ndarray:
@@ -97,35 +105,56 @@ def _peel_loop(problem: NucleusProblem, schedule: PeelSchedule) -> PeelResult:
 
 def _run(problem: NucleusProblem, schedule: PeelSchedule,
          backend: Literal["gather", "dense"],
-         use_pallas: Optional[bool]) -> PeelResult:
+         use_pallas: Optional[bool], hierarchy: bool = False) -> PeelResult:
     if backend == "dense":
+        if hierarchy:
+            core, order, rounds, parent, L = dense_coreness(
+                problem, schedule, use_pallas=use_pallas, hierarchy=True)
+            return PeelResult(core=core, rounds=int(rounds),
+                              order_round=order, uf_parent=parent, uf_L=L)
         core, order, rounds = dense_coreness(problem, schedule,
                                              use_pallas=use_pallas)
         return PeelResult(core=core, rounds=int(rounds), order_round=order)
-    return _peel_loop(problem, schedule)
+    res = _peel_loop(problem, schedule)
+    if hierarchy:
+        # eager backend: the forest comes from the host trace-replay oracle
+        # (identical output by the DESIGN.md §4 contract); import is lazy to
+        # avoid the peel <-> interleaved cycle
+        from .interleaved import replay_trace, _resolve
+        state = replay_trace(problem, res)
+        parent = _resolve(state.parent, np.arange(problem.n_r,
+                                                  dtype=np.int64))
+        res = dataclasses.replace(res, uf_parent=jnp.asarray(parent, INT),
+                                  uf_L=jnp.asarray(state.L, INT))
+    return res
 
 
 def exact_coreness(problem: NucleusProblem,
                    backend: Literal["gather", "dense"] = "gather",
-                   use_pallas: Optional[bool] = None) -> PeelResult:
-    return _run(problem, make_schedule(problem, "exact"), backend, use_pallas)
+                   use_pallas: Optional[bool] = None,
+                   hierarchy: bool = False) -> PeelResult:
+    """Exact core numbers; hierarchy=True also returns the ANH-EL join
+    forest (fused into the same jitted call on the dense backend)."""
+    return _run(problem, make_schedule(problem, "exact"), backend,
+                use_pallas, hierarchy)
 
 
 def approx_coreness(problem: NucleusProblem, delta: float = 0.1,
                     backend: Literal["gather", "dense"] = "gather",
-                    use_pallas: Optional[bool] = None) -> PeelResult:
+                    use_pallas: Optional[bool] = None,
+                    hierarchy: bool = False) -> PeelResult:
     """(C(s,r)+eps)-approximate core numbers, eps = (C+delta)(1+delta)/C - C.
 
     Estimates are >= the true core and <= (C(s,r)+delta)(1+delta) * true core
     (Theorem 6.3).  Practical tightening: assigned value is clipped to the
     clique's original s-clique-degree (paper §6); ``peel_value`` keeps the
     unclipped bucket values because those drove LINK equality during the
-    peel (the hierarchy replay must see them).
+    peel (the hierarchy replay must see them — and the fused forest is
+    likewise built over the unclipped values).
     """
     res = _run(problem, make_schedule(problem, "approx", delta), backend,
-               use_pallas)
+               use_pallas, hierarchy)
     # practical improvement: estimate <= original degree
     core = jnp.minimum(res.core, problem.deg0)
     # still must be >= true core; deg0 >= true core always, so safe.
-    return PeelResult(core=core, rounds=res.rounds,
-                      order_round=res.order_round, peel_value=res.core)
+    return dataclasses.replace(res, core=core, peel_value=res.core)

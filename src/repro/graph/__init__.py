@@ -3,6 +3,7 @@ from .orientation import degree_rank, approx_degeneracy_rank
 from .cliques import (CliqueLevels, list_cliques, count_cliques, unique_rows,
                       sort_join, lexsort_rows, subset_columns)
 from .connectivity import connected_components, pointer_jump
-from .unionfind import BatchedUnionFind
+from .unionfind import (BatchedUnionFind, uf_create, uf_find_all,
+                        uf_union_edges)
 from . import generators
 from .sampler import NeighborSampler, SampledBlock

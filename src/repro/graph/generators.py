@@ -71,6 +71,30 @@ def paper_figure1_like() -> Graph:
     return make_graph(9, np.asarray(edges, dtype=np.int64))
 
 
+def golden_suite():
+    """The golden-fixture graph suite: name -> zero-arg Graph factory.
+
+    The SINGLE definition shared by tools/regen_golden.py (writes
+    tests/golden/*.json) and tests/test_golden.py (re-derives and checks) —
+    a seed or parameter drifting between writer and checker would otherwise
+    surface as a misleading backend-mismatch failure.
+    """
+    return {
+        "triangle": lambda: tiny_named("triangle"),
+        "k4": lambda: tiny_named("k4"),
+        "path4": lambda: tiny_named("path4"),
+        "two_triangles": lambda: tiny_named("two_triangles"),
+        "bowtie_plus": lambda: tiny_named("bowtie_plus"),
+        "fig1": paper_figure1_like,
+        # seeded generators: deterministic, big enough for multi-level trees
+        "er20": lambda: erdos_renyi(20, 0.35, seed=1),
+        "planted40": lambda: planted_cliques(40, [8, 6, 5], 0.05, seed=3),
+    }
+
+
+GOLDEN_RS = [(1, 2), (2, 3), (3, 4)]
+
+
 def tiny_named(name: str) -> Graph:
     if name == "triangle":
         return make_graph(3, [(0, 1), (1, 2), (0, 2)])

@@ -8,7 +8,8 @@ from repro.core import (build_problem, exact_coreness, approx_coreness,
                         build_hierarchy_levels, build_hierarchy_basic,
                         build_hierarchy_interleaved, nh_coreness, nh_hierarchy,
                         brute_force_coreness, cut_hierarchy,
-                        nuclei_without_hierarchy, same_partition)
+                        nuclei_without_hierarchy, same_partition,
+                        edge_density)
 
 GRAPHS = {
     "triangle": generators.tiny_named("triangle"),
@@ -164,6 +165,31 @@ def test_k_truss_special_case():
     p = build_problem(g, 2, 3)
     core = np.asarray(exact_coreness(p).core)
     np.testing.assert_array_equal(core, np.full(6, 2))
+
+
+def _edge_density_bruteforce(g_edges, vertices):
+    """Definition-level oracle: the per-edge Python set scan the vectorized
+    ``edge_density`` replaced."""
+    k = len(vertices)
+    if k < 2:
+        return 0.0
+    vs = set(int(x) for x in vertices)
+    inside = sum(1 for u, v in g_edges if int(u) in vs and int(v) in vs)
+    return inside / (k * (k - 1) / 2)
+
+
+def test_edge_density_matches_bruteforce():
+    rng = np.random.default_rng(7)
+    g = generators.erdos_renyi(30, 0.2, seed=9)
+    edges = np.asarray(g.edges)
+    for k in [0, 1, 2, 5, 13, 30]:
+        for trial in range(4):
+            vs = rng.choice(30, size=k, replace=False)
+            got = edge_density(edges, vs)
+            want = _edge_density_bruteforce(edges, vs)
+            assert got == pytest.approx(want), (k, trial)
+    # empty edge array
+    assert edge_density(np.zeros((0, 2), np.int64), np.arange(5)) == 0.0
 
 
 def test_fig1_like_hierarchy_structure():

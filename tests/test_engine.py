@@ -13,7 +13,9 @@ import pytest
 from repro.graph import generators
 from repro.core import (build_problem, exact_coreness, approx_coreness,
                         build_hierarchy_levels, build_hierarchy_interleaved,
-                        nh_coreness, replay_trace, construct_tree_efficient)
+                        nh_coreness, replay_trace, construct_tree_efficient,
+                        link_state_from_forest)
+from repro.core.interleaved import _resolve
 
 GRAPHS = {
     "er30": generators.erdos_renyi(30, 0.25, seed=2),
@@ -121,6 +123,49 @@ def test_trace_replay_equals_direct_replay(gname, r, s):
     pairs = _sample_pairs(p.n_r, seed=11)
     np.testing.assert_array_equal(t_e.join_levels(pairs),
                                   t_g.join_levels(pairs))
+
+
+@pytest.mark.parametrize("mode", ["exact", "approx"])
+@pytest.mark.parametrize("gname,r,s", problems())
+def test_fused_forest_matches_replay_oracle(gname, r, s, mode):
+    """The on-device LINK fixpoint (hierarchy=True: uf/L threaded through
+    the compiled peel carry) must reproduce the host trace-replay state
+    EXACTLY — same resolved parents, same L at every root, same tree."""
+    p = build_problem(GRAPHS[gname], r, s)
+    if p.n_r == 0:
+        pytest.skip("no r-cliques")
+    peel = (exact_coreness if mode == "exact"
+            else lambda q, **kw: approx_coreness(q, delta=0.1, **kw))
+    res = peel(p, backend="dense", hierarchy=True)
+    assert res.has_hierarchy
+    state = replay_trace(p, res)
+    ref_parent = _resolve(state.parent, np.arange(p.n_r, dtype=np.int64))
+    got_parent = np.asarray(res.uf_parent).astype(np.int64)
+    np.testing.assert_array_equal(got_parent, ref_parent)
+    roots = np.unique(ref_parent)
+    np.testing.assert_array_equal(
+        np.asarray(res.uf_L).astype(np.int64)[roots], state.L[roots])
+    t_fused = construct_tree_efficient(p, link_state_from_forest(
+        res.peel_value, res.uf_parent, res.uf_L))
+    t_replay = construct_tree_efficient(p, state)
+    pairs = _sample_pairs(p.n_r, seed=13)
+    np.testing.assert_array_equal(t_fused.join_levels(pairs),
+                                  t_replay.join_levels(pairs))
+
+
+@pytest.mark.parametrize("gname,r,s", problems())
+def test_fused_hierarchy_does_not_perturb_coreness(gname, r, s):
+    """hierarchy=True only extends the carry: core/order/rounds unchanged."""
+    p = build_problem(GRAPHS[gname], r, s)
+    if p.n_r == 0:
+        pytest.skip("no r-cliques")
+    plain = exact_coreness(p, backend="dense")
+    fused = exact_coreness(p, backend="dense", hierarchy=True)
+    np.testing.assert_array_equal(np.asarray(plain.core),
+                                  np.asarray(fused.core))
+    np.testing.assert_array_equal(np.asarray(plain.order_round),
+                                  np.asarray(fused.order_round))
+    assert plain.rounds == fused.rounds
 
 
 def test_engine_empty_problem():

@@ -1,0 +1,103 @@
+"""Golden regression fixtures: every backend vs the committed canon.
+
+tests/golden/*.json pin, per (graph, r, s): exact core numbers and the
+canonicalized c-(r,s) nucleus partition at every distinct positive core
+level (a cut of the ANH-EL hierarchy).  Regenerate deliberately with
+`make regen-golden`; the JSON diff is the review artifact.
+
+Checked backends: coreness via gather / dense / dense+pallas(interpret) /
+shard_map; hierarchy via host trace replay, the fused on-device LINK
+fixpoint, two-phase ANH-TE and per-level ANH-BL.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.graph.generators import golden_suite, GOLDEN_RS
+from repro.core import (build_problem, exact_coreness, canonicalize_labels,
+                        build_hierarchy_interleaved, build_hierarchy_levels,
+                        build_hierarchy_basic, cut_hierarchy,
+                        sharded_decomposition)
+
+pytestmark = pytest.mark.fast
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "golden")
+
+# the one graph-suite definition, shared with tools/regen_golden.py
+GRAPHS = golden_suite()
+
+
+def fixtures():
+    for fname in sorted(os.listdir(GOLDEN_DIR)):
+        if fname.endswith(".json"):
+            yield pytest.param(fname, id=fname[:-len(".json")])
+
+
+def _load(fname):
+    with open(os.path.join(GOLDEN_DIR, fname)) as f:
+        fx = json.load(f)
+    problem = build_problem(GRAPHS[fx["graph"]](), fx["r"], fx["s"])
+    assert problem.n_r == fx["n_r"], "graph/generator drift vs fixture"
+    return fx, problem
+
+
+def _check_partitions(fx, tree, label=""):
+    for c_str, want in fx["partitions"].items():
+        got = canonicalize_labels(cut_hierarchy(tree, int(c_str)))
+        np.testing.assert_array_equal(
+            got, np.asarray(want), err_msg=f"{label} cut level c={c_str}")
+
+
+def test_golden_files_exist():
+    assert len(list(fixtures())) == len(GRAPHS) * len(GOLDEN_RS)
+
+
+@pytest.mark.parametrize("fname", fixtures())
+def test_golden_coreness_all_backends(fname):
+    fx, p = _load(fname)
+    if p.n_r == 0:
+        pytest.skip("no r-cliques")
+    want = np.asarray(fx["core"])
+    for label, res in [
+            ("gather", exact_coreness(p, backend="gather")),
+            ("dense", exact_coreness(p, backend="dense")),
+            ("pallas", exact_coreness(p, backend="dense", use_pallas=True)),
+    ]:
+        np.testing.assert_array_equal(np.asarray(res.core), want,
+                                      err_msg=f"backend={label}")
+
+
+@pytest.mark.parametrize("fname", fixtures())
+def test_golden_hierarchy_all_backends(fname):
+    fx, p = _load(fname)
+    if p.n_r == 0:
+        pytest.skip("no r-cliques")
+    core = exact_coreness(p).core
+    trees = {
+        "replay": build_hierarchy_interleaved(
+            p, backend="dense", link="replay").tree,
+        "fused": build_hierarchy_interleaved(
+            p, backend="dense", link="fused").tree,
+        "te": build_hierarchy_levels(p, core),
+        "bl": build_hierarchy_basic(p, core),
+    }
+    for label, tree in trees.items():
+        _check_partitions(fx, tree, label)
+
+
+@pytest.mark.parametrize("fname", fixtures())
+def test_golden_sharded_backend(fname):
+    from repro.launch.mesh import make_host_mesh
+    from repro.core import link_state_from_forest, construct_tree_efficient
+    fx, p = _load(fname)
+    if p.n_r == 0:
+        pytest.skip("no r-cliques")
+    core, _rounds, parent, L, raw = sharded_decomposition(
+        p, make_host_mesh(), kind="exact", hierarchy=True)
+    np.testing.assert_array_equal(np.asarray(core), np.asarray(fx["core"]))
+    state = link_state_from_forest(raw, parent, L)
+    tree = construct_tree_efficient(p, state)
+    _check_partitions(fx, tree)

@@ -8,9 +8,12 @@ from hypothesis import given, settings, strategies as st, HealthCheck
 from repro.graph import generators, make_graph, connected_components, INT
 from repro.core import (build_problem, exact_coreness, approx_coreness,
                         build_hierarchy_levels, nh_coreness, nh_hierarchy,
-                        build_hierarchy_interleaved)
+                        build_hierarchy_interleaved, cut_hierarchy,
+                        nuclei_without_hierarchy, same_partition)
 
 import jax.numpy as jnp
+
+pytestmark = pytest.mark.slow  # hypothesis lane: full-suite job only
 
 SETTINGS = dict(max_examples=15, deadline=None,
                 suppress_health_check=[HealthCheck.too_slow])
@@ -93,6 +96,31 @@ def test_interleaved_tree_matches_two_phase(n, m, seed):
                       rng.integers(0, p.n_r, k)], axis=1)
     np.testing.assert_array_equal(res.tree.join_levels(pairs),
                                   t_te.join_levels(pairs))
+
+
+@settings(**SETTINGS)
+@given(st.integers(5, 18), st.integers(0, 50), st.integers(0, 10**6),
+       st.integers(0, 10**6), st.sampled_from(["exact", "approx"]))
+def test_fused_tree_cut_matches_no_hierarchy(n, m, seed, cut_seed, mode):
+    """Cutting the fused on-device hierarchy at any level c induces exactly
+    the partition that connectivity over {core >= c} computes from scratch
+    (`nuclei_without_hierarchy`) — for both peel schedules.
+
+    For the approximate schedule the hierarchy is built over the raw
+    (unclipped) bucket values, so the baseline must see those same values.
+    """
+    g = _random_graph(n, m, seed)
+    p = build_problem(g, 2, 3)
+    if p.n_r == 0:
+        return
+    res = build_hierarchy_interleaved(p, mode=mode, backend="dense",
+                                      link="fused")
+    vals = res.state.core  # raw peel values (== core for exact)
+    lo, hi = int(vals.min()), int(vals.max())
+    c = lo + cut_seed % (hi - lo + 2)  # may exceed hi: empty cut is legal
+    via_tree = cut_hierarchy(res.tree, c)
+    via_cc = nuclei_without_hierarchy(p, jnp.asarray(vals, INT), c)
+    assert same_partition(via_tree, via_cc), (c, via_tree, via_cc)
 
 
 @settings(**SETTINGS)

@@ -1,0 +1,67 @@
+"""Regenerate the golden regression fixtures under tests/golden/.
+
+Usage: PYTHONPATH=src python tools/regen_golden.py  (or `make regen-golden`)
+
+For every (graph, r, s) cell the fixture stores the exact core numbers and,
+for each distinct positive core value c, the canonicalized c-(r,s) nucleus
+partition (cut of the ANH-EL hierarchy).  Values are produced by the eager
+work-efficient gather backend + host trace replay — the most directly
+oracle-pinned path (tests pin it against the sequential NH baseline and the
+brute-force definition) — and every other backend is checked against them
+by tests/test_golden.py.
+
+Regenerate ONLY when the canonical semantics intentionally change; the diff
+of the JSON files is the review artifact.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.graph.generators import golden_suite, GOLDEN_RS  # noqa: E402
+from repro.core import (build_problem, exact_coreness, canonicalize_labels,
+                        build_hierarchy_interleaved, cut_hierarchy)  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
+
+GRAPHS = golden_suite()
+RS = GOLDEN_RS
+
+
+def fixture(gname: str, r: int, s: int) -> dict:
+    g = GRAPHS[gname]()
+    problem = build_problem(g, r, s)
+    fx = {"graph": gname, "r": r, "s": s, "n_r": problem.n_r,
+          "n_s": problem.n_s, "core": [], "partitions": {}}
+    if problem.n_r == 0:
+        return fx
+    core = np.asarray(exact_coreness(problem, backend="gather").core)
+    fx["core"] = [int(x) for x in core]
+    res = build_hierarchy_interleaved(problem, mode="exact",
+                                     backend="gather", link="replay")
+    for c in sorted(set(int(x) for x in core if x > 0)):
+        labels = canonicalize_labels(cut_hierarchy(res.tree, c))
+        fx["partitions"][str(c)] = [int(x) for x in labels]
+    return fx
+
+
+def main() -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    for gname in GRAPHS:
+        for (r, s) in RS:
+            fx = fixture(gname, r, s)
+            path = os.path.join(OUT_DIR, f"{gname}_r{r}s{s}.json")
+            with open(path, "w") as f:
+                json.dump(fx, f, indent=1, sort_keys=True)
+                f.write("\n")
+            print(f"wrote {os.path.relpath(path)} "
+                  f"(n_r={fx['n_r']}, levels={len(fx['partitions'])})")
+
+
+if __name__ == "__main__":
+    main()
