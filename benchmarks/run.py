@@ -8,8 +8,11 @@ artifact (what the CI bench job uploads).
 The `engine` lane (and the engine rows inside fig8) time the compiled
 `lax.while_loop` peel engine against the eager dense round loop it replaced;
 the `hierarchy` lane times fused-on-device ANH-EL against host trace-replay
-and the two-phase build.  Compile time is excluded via a warmup call, so
-the rows measure steady-state wall-clock (what EXPERIMENTS.md records).
+and the two-phase build; the `facade` lane records the decompose-once/
+query-many serving claim (`.cut(c)` sweep qps vs from-scratch connectivity,
+plus the serialized-artifact load cost).  Compile time is excluded via a
+warmup call, so the rows measure steady-state wall-clock (what
+EXPERIMENTS.md records).
 """
 from __future__ import annotations
 

@@ -8,7 +8,7 @@ import time
 import numpy as np
 
 from repro.graph import generators
-from repro.core import build_problem, exact_coreness, approx_coreness
+from repro.core import build_problem, decompose, NucleusConfig
 
 
 def main() -> None:
@@ -17,18 +17,19 @@ def main() -> None:
     print(f"graph n={g.n} m={g.m}; (2,3) decomposition, "
           f"n_r={problem.n_r}, n_s={problem.n_s}")
 
+    cfg = NucleusConfig(r=2, s=3, backend="gather", hierarchy="none")
     t0 = time.perf_counter()
-    exact = exact_coreness(problem)
+    exact = decompose(problem, cfg)
     t_exact = time.perf_counter() - t0
-    e = np.asarray(exact.core).astype(float)
+    e = exact.core.astype(float)
     print(f"\nexact : {exact.rounds:5d} peel rounds  {t_exact:6.2f}s  "
           f"kmax={int(e.max())}")
 
     for delta in (0.1, 0.5, 1.0):
         t0 = time.perf_counter()
-        approx = approx_coreness(problem, delta=delta)
+        approx = decompose(problem, cfg, method="approx", delta=delta)
         t_a = time.perf_counter() - t0
-        a = np.asarray(approx.core).astype(float)
+        a = approx.core.astype(float)
         sel = e > 0
         ratio = a[sel] / e[sel]
         print(f"delta={delta:3.1f}: {approx.rounds:5d} peel rounds  "

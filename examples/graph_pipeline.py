@@ -16,9 +16,7 @@ import jax.numpy as jnp
 from functools import partial
 
 from repro.graph import make_graph, generators
-from repro.core import (build_problem, exact_coreness,
-                        build_hierarchy_levels, cut_hierarchy,
-                        nucleus_vertex_sets)
+from repro.core import decompose, NucleusConfig
 from repro.models import gin
 from repro.models.gnn_common import make_batch_from_arrays
 from repro.optim import adamw
@@ -83,15 +81,14 @@ def main() -> None:
     print(f"raw graph: n={g.n} m={g.m}")
 
     # --- the paper: decompose, cut, curate ---------------------------------
-    problem = build_problem(g, 2, 3)
-    core = exact_coreness(problem).core
-    tree = build_hierarchy_levels(problem, core)
-    kmax = int(np.asarray(core).max())
+    dec = decompose(g, NucleusConfig(r=2, s=3, backend="dense",
+                                     hierarchy="two_phase"))
+    kmax = int(dec.core.max())
     cut_level = max(2, kmax // 3)
-    nuclei = nucleus_vertex_sets(problem, cut_hierarchy(tree, cut_level))
+    nuclei = dec.nuclei(cut_level)
     keep = np.zeros(g.n, bool)
-    for verts in nuclei.values():
-        keep[verts] = True
+    for nc in nuclei.values():
+        keep[nc.vertices] = True
     e = np.asarray(g.edges)
     sel = keep[e[:, 0]] & keep[e[:, 1]]
     g_cur = make_graph(g.n, e[sel])

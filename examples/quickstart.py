@@ -11,9 +11,7 @@ import argparse
 import numpy as np
 
 from repro.graph import generators
-from repro.core import (build_problem, exact_coreness,
-                        build_hierarchy_interleaved, cut_hierarchy,
-                        nucleus_vertex_sets, edge_density)
+from repro.core import decompose, NucleusConfig
 
 
 def main() -> None:
@@ -26,22 +24,22 @@ def main() -> None:
     g = generators.planted_cliques(args.n, [16, 12, 9, 7], 0.02, seed=1)
     print(f"graph: n={g.n} m={g.m};  ({args.r},{args.s}) nucleus decomposition")
 
-    problem = build_problem(g, args.r, args.s)
-    print(f"r-cliques: {problem.n_r}, s-cliques: {problem.n_s}")
+    # ONE call: incidence structure + compiled peel + fused ANH-EL hierarchy
+    dec = decompose(g, NucleusConfig(r=args.r, s=args.s, backend="dense",
+                                     hierarchy="fused"))
+    print(f"r-cliques: {dec.n_r}, s-cliques: {dec.problem.n_s}")
 
-    res = build_hierarchy_interleaved(problem)  # coreness + hierarchy, 1 pass
-    core = np.asarray(res.core)
+    core = dec.core
     print(f"coreness: max={core.max()}  "
-          f"mean={core.mean():.2f}  peel rounds={res.rounds}")
+          f"mean={core.mean():.2f}  peel rounds={dec.rounds}")
 
-    tree = res.tree
+    tree = dec.tree  # lazy: materialized from the fused forest on demand
     print(f"hierarchy: {tree.n_leaves} leaves, {tree.n_internal} internal "
           f"nodes")
     for c in sorted(set([1, int(core.max() // 2), int(core.max())])):
-        labels = cut_hierarchy(tree, c)
-        nuclei = nucleus_vertex_sets(problem, labels)
-        dens = sorted((edge_density(np.asarray(g.edges), v), len(v))
-                      for v in nuclei.values())[::-1][:3]
+        nuclei = dec.nuclei(c)
+        dens = sorted((nc.density, len(nc.vertices))
+                      for nc in nuclei.values())[::-1][:3]
         print(f"  c={c:3d}: {len(nuclei):4d} nuclei; densest: "
               + ", ".join(f"density={d:.2f} |V|={k}" for d, k in dens))
 

@@ -1,41 +1,147 @@
 """The paper's contribution: parallel (r, s) nucleus decomposition + hierarchy.
 
-Public surface:
-  build_problem            — (r, s) incidence structure over a Graph
-  exact_coreness           — ARB-NUCLEUS analog (bucketed parallel peeling)
-  approx_coreness          — APPROX-ARB-NUCLEUS (Alg. 2, geometric buckets)
-  build_hierarchy_levels   — ANH-TE (two-phase, level-descending connectivity)
-  build_hierarchy_basic    — ANH-BL (per-level from-scratch baseline)
-  build_hierarchy_interleaved — ANH-EL (Alg. 3+5, uf + L, single pass)
-  nh_full / nh_coreness / nh_hierarchy — sequential NH baseline + oracle
-  cut_hierarchy / nuclei_without_hierarchy — Fig. 10 queries
-  sharded_decomposition    — shard_map-distributed peeling (multi-pod ready)
+One front door (DESIGN.md §6):
+
+  decompose(graph, config) -> Decomposition
+      Runs the whole pipeline — incidence structure, exact/approx peeling on
+      the chosen backend (compiled dense engine, eager gather, shard_map,
+      sequential NH), with the ANH-EL join forest optionally fused into the
+      same jitted call — and returns the build-once/query-many artifact.
+  NucleusConfig
+      Every axis in one frozen, validated record: (r, s), method, backend,
+      hierarchy strategy, Pallas/mesh knobs.  ``validate()`` rejects illegal
+      combinations with actionable errors.
+  Decomposition
+      Lazy + cached results: ``.core`` / ``.rounds`` / ``.tree`` /
+      ``.cut(c)`` / ``.nuclei(c)``, plus ``to_json()`` / ``from_json()`` so
+      a decomposition computed offline is served by
+      ``python -m repro.launch.serve --arch nucleus``.
+
+Building blocks (stable, used by the facade and by tests/oracles):
+
+  build_problem / NucleusProblem — the (r, s) incidence structure
   PeelSchedule / peel_round / run_peel_engine — the ONE bucket schedule and
-                             the ONE compiled peel-round body every backend
-                             (dense, distributed) shares; gather drives the
-                             same schedule eagerly
-  replay_trace             — LINK-EFFICIENT over the on-device peel trace
-                             (the host oracle for the fused fixpoint)
+      ONE compiled peel-round body every backend shares
   round_links / link_fixpoint — the fused on-device ANH-EL LINK state
-                             (hierarchy=True: coreness + join forest in one
-                             jitted call; DESIGN.md §5)
+  replay_trace / construct_tree_efficient / link_state_from_forest — host
+      LINK oracle + the tree post-pass
+  HierarchyTree / hierarchy_edges — tree container + the L_i edge tables
+  nucleus_vertex_sets / edge_density / canonicalize_labels / same_partition
+  make_sharded_decomposition / pad_incidence — mesh-lowerable distributed
+      pieces; brute_force_coreness — the definition-level oracle
+
+Legacy per-function entry points (exact_coreness, approx_coreness,
+dense_coreness, build_hierarchy_*, nh_*, cut_hierarchy,
+nuclei_without_hierarchy, sharded_decomposition) remain importable from this
+package but are deprecated: they emit a ``DeprecationWarning`` on first use
+and delegate unchanged.  New code goes through ``decompose()``.
 """
+import functools as _functools
+import warnings as _warnings
+
 from .incidence import NucleusProblem, build_problem
 from .schedule import PeelSchedule
-from .engine import (peel_round, run_peel_engine, dense_coreness,
-                     make_schedule, scatter_decrement, round_links,
-                     link_fixpoint)
-from .peel import PeelResult, exact_coreness, approx_coreness
-from .hierarchy import (HierarchyTree, build_hierarchy_levels,
-                        build_hierarchy_basic, hierarchy_edges)
+from .engine import (peel_round, run_peel_engine, make_schedule,
+                     scatter_decrement, round_links, link_fixpoint)
+from .engine import dense_coreness as _dense_coreness
+from .peel import PeelResult
+from .peel import exact_coreness as _exact_coreness
+from .peel import approx_coreness as _approx_coreness
+from .hierarchy import HierarchyTree, hierarchy_edges
+from .hierarchy import build_hierarchy_levels as _build_hierarchy_levels
+from .hierarchy import build_hierarchy_basic as _build_hierarchy_basic
 from .interleaved import (LinkState, InterleavedResult,
-                          build_hierarchy_interleaved,
                           construct_tree_efficient, replay_trace,
                           link_state_from_forest)
-from .nh_baseline import (nh_coreness, nh_hierarchy, nh_full,
-                          brute_force_coreness)
-from .nuclei import (cut_hierarchy, nuclei_without_hierarchy,
-                     nucleus_vertex_sets, edge_density, same_partition,
+from .interleaved import build_hierarchy_interleaved as \
+    _build_hierarchy_interleaved
+from .nh_baseline import brute_force_coreness
+from .nh_baseline import nh_coreness as _nh_coreness
+from .nh_baseline import nh_hierarchy as _nh_hierarchy
+from .nh_baseline import nh_full as _nh_full
+from .nuclei import (nucleus_vertex_sets, edge_density, same_partition,
                      canonicalize_labels)
-from .distributed import (sharded_decomposition,
-                          make_sharded_decomposition, pad_incidence)
+from .nuclei import cut_hierarchy as _cut_hierarchy
+from .nuclei import nuclei_without_hierarchy as _nuclei_without_hierarchy
+from .distributed import make_sharded_decomposition, pad_incidence
+from .distributed import sharded_decomposition as _sharded_decomposition
+from .api import (NucleusConfig, Decomposition, Nucleus, ConfigError,
+                  decompose)
+
+# ---------------------------------------------------------------------------
+# Deprecated legacy surface: thin wrappers that warn once, then delegate.
+# In-repo code imports the implementations from their submodules (or uses
+# decompose()); only the historical package-level names pay the warning.
+# ---------------------------------------------------------------------------
+
+_warned_deprecations = set()
+
+
+def _reset_deprecation_warnings() -> None:
+    """Testing hook: make every deprecated wrapper warn again."""
+    _warned_deprecations.clear()
+
+
+def _deprecated(name, impl, hint):
+    @_functools.wraps(impl)
+    def wrapper(*args, **kwargs):
+        if name not in _warned_deprecations:
+            _warned_deprecations.add(name)
+            _warnings.warn(
+                f"repro.core.{name} is deprecated; {hint}",
+                DeprecationWarning, stacklevel=2)
+        return impl(*args, **kwargs)
+    wrapper.__deprecated__ = (
+        f"repro.core.{name} is deprecated; {hint}")
+    return wrapper
+
+
+_HINT = "use repro.core.decompose(graph, NucleusConfig(...))"
+DEPRECATED_NAMES = {
+    "exact_coreness": (_exact_coreness, f"{_HINT} with method='exact'"),
+    "approx_coreness": (_approx_coreness, f"{_HINT} with method='approx'"),
+    "dense_coreness": (_dense_coreness, f"{_HINT} with backend='dense'"),
+    "sharded_decomposition": (
+        _sharded_decomposition, f"{_HINT} with backend='sharded'"),
+    "build_hierarchy_levels": (
+        _build_hierarchy_levels, f"{_HINT} with hierarchy='two_phase'"),
+    "build_hierarchy_basic": (
+        _build_hierarchy_basic, f"{_HINT} with hierarchy='basic'"),
+    "build_hierarchy_interleaved": (
+        _build_hierarchy_interleaved,
+        f"{_HINT} with hierarchy='fused' (or 'replay')"),
+    "nh_coreness": (_nh_coreness, f"{_HINT} with backend='nh'"),
+    "nh_hierarchy": (
+        _nh_hierarchy,
+        "use repro.core.nh_baseline.nh_hierarchy (oracle) or decompose() "
+        "with backend='nh', hierarchy='two_phase'"),
+    "nh_full": (
+        _nh_full,
+        "use repro.core.nh_baseline.nh_full (oracle) or decompose() with "
+        "backend='nh'"),
+    "cut_hierarchy": (
+        _cut_hierarchy, "use Decomposition.cut(c) from decompose()"),
+    "nuclei_without_hierarchy": (
+        _nuclei_without_hierarchy,
+        "use Decomposition.cut(c)/.nuclei(c); the from-scratch baseline "
+        "lives at repro.core.nuclei.nuclei_without_hierarchy"),
+}
+
+exact_coreness = _deprecated("exact_coreness", *DEPRECATED_NAMES["exact_coreness"])
+approx_coreness = _deprecated("approx_coreness", *DEPRECATED_NAMES["approx_coreness"])
+dense_coreness = _deprecated("dense_coreness", *DEPRECATED_NAMES["dense_coreness"])
+sharded_decomposition = _deprecated(
+    "sharded_decomposition", *DEPRECATED_NAMES["sharded_decomposition"])
+build_hierarchy_levels = _deprecated(
+    "build_hierarchy_levels", *DEPRECATED_NAMES["build_hierarchy_levels"])
+build_hierarchy_basic = _deprecated(
+    "build_hierarchy_basic", *DEPRECATED_NAMES["build_hierarchy_basic"])
+build_hierarchy_interleaved = _deprecated(
+    "build_hierarchy_interleaved",
+    *DEPRECATED_NAMES["build_hierarchy_interleaved"])
+nh_coreness = _deprecated("nh_coreness", *DEPRECATED_NAMES["nh_coreness"])
+nh_hierarchy = _deprecated("nh_hierarchy", *DEPRECATED_NAMES["nh_hierarchy"])
+nh_full = _deprecated("nh_full", *DEPRECATED_NAMES["nh_full"])
+cut_hierarchy = _deprecated("cut_hierarchy", *DEPRECATED_NAMES["cut_hierarchy"])
+nuclei_without_hierarchy = _deprecated(
+    "nuclei_without_hierarchy", *DEPRECATED_NAMES["nuclei_without_hierarchy"])

@@ -36,9 +36,11 @@ class PeelResult:
     core: jnp.ndarray          # (n_r,) int32 — exact or estimated core numbers
     rounds: int                # number of peel rounds (peeling-complexity proxy)
     order_round: jnp.ndarray   # (n_r,) round index at which each clique peeled
-    peel_value: jnp.ndarray = None  # (n_r,) raw bucket value assigned at peel
-    # time (pre-clipping) — the trace value LINK replay needs; == core
-    # for exact peeling.
+    peel_value: Optional[jnp.ndarray] = None  # (n_r,) raw bucket value
+    # assigned at peel time (pre-clipping) — the trace value LINK replay
+    # needs; == core for exact peeling.  None is a construction-time
+    # sentinel only: __post_init__ replaces it with ``core``, so a
+    # materialized PeelResult always carries a real array.
     uf_parent: Optional[jnp.ndarray] = None  # (n_r,) resolved ANH-EL union-
     uf_L: Optional[jnp.ndarray] = None       # find + nearest-lower-core table
     # (hierarchy=True only) — the join forest of the fused LINK fixpoint.

@@ -174,14 +174,13 @@ def test_nucleus_smoke():
     """The paper's own config: sharded decomposition on the host mesh
     matches the reference exact peeling."""
     from repro.graph import generators
-    from repro.core import build_problem, exact_coreness, sharded_decomposition
-    from repro.launch.mesh import make_host_mesh
+    from repro.core import build_problem, decompose, NucleusConfig
     g = generators.planted_cliques(30, [6, 5], 0.08, seed=0)
     p = build_problem(g, 2, 3)
-    mesh = make_host_mesh()
-    core, rounds = sharded_decomposition(p, mesh, kind="exact")
-    want = exact_coreness(p).core
-    np.testing.assert_array_equal(np.asarray(core), np.asarray(want))
+    sharded = decompose(p, NucleusConfig(backend="sharded",
+                                         hierarchy="none"))
+    want = decompose(p, NucleusConfig(backend="gather", hierarchy="none"))
+    np.testing.assert_array_equal(sharded.core, want.core)
 
 
 def test_every_assigned_arch_is_registered():

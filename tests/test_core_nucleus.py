@@ -4,12 +4,16 @@ import pytest
 import jax.numpy as jnp
 
 from repro.graph import generators
-from repro.core import (build_problem, exact_coreness, approx_coreness,
-                        build_hierarchy_levels, build_hierarchy_basic,
-                        build_hierarchy_interleaved, nh_coreness, nh_hierarchy,
-                        brute_force_coreness, cut_hierarchy,
-                        nuclei_without_hierarchy, same_partition,
-                        edge_density)
+# oracle/parity tests import the building blocks from their submodules —
+# the deprecated package-level names are exercised (once) by test_facade.py
+from repro.core import build_problem, same_partition, edge_density
+from repro.core.peel import exact_coreness, approx_coreness
+from repro.core.hierarchy import (build_hierarchy_levels,
+                                  build_hierarchy_basic)
+from repro.core.interleaved import build_hierarchy_interleaved
+from repro.core.nh_baseline import (nh_coreness, nh_hierarchy,
+                                    brute_force_coreness)
+from repro.core.nuclei import cut_hierarchy, nuclei_without_hierarchy
 
 GRAPHS = {
     "triangle": generators.tiny_named("triangle"),

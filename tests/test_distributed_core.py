@@ -15,8 +15,9 @@ import pytest
 import jax
 
 from repro.graph import generators
-from repro.core import (build_problem, exact_coreness, approx_coreness,
-                        sharded_decomposition)
+from repro.core import build_problem
+from repro.core.peel import exact_coreness, approx_coreness
+from repro.core.distributed import sharded_decomposition
 from repro.launch.mesh import make_host_mesh
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -56,7 +57,9 @@ _SUBPROC_SCRIPT = textwrap.dedent("""
     import numpy as np
     import jax
     from repro.graph import generators
-    from repro.core import build_problem, exact_coreness, sharded_decomposition
+    from repro.core import build_problem
+    from repro.core.peel import exact_coreness
+    from repro.core.distributed import sharded_decomposition
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     g = generators.planted_cliques(40, [8, 6, 5], 0.05, seed=11)
@@ -107,9 +110,10 @@ _SUBPROC_HIERARCHY = textwrap.dedent("""
     import numpy as np
     import jax
     from repro.graph import generators
-    from repro.core import (build_problem, exact_coreness, approx_coreness,
-                            sharded_decomposition, link_state_from_forest,
+    from repro.core import (build_problem, link_state_from_forest,
                             construct_tree_efficient)
+    from repro.core.peel import exact_coreness, approx_coreness
+    from repro.core.distributed import sharded_decomposition
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
     g = generators.planted_cliques(40, [8, 6, 5], 0.05, seed=11)

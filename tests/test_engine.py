@@ -11,11 +11,12 @@ import numpy as np
 import pytest
 
 from repro.graph import generators
-from repro.core import (build_problem, exact_coreness, approx_coreness,
-                        build_hierarchy_levels, build_hierarchy_interleaved,
-                        nh_coreness, replay_trace, construct_tree_efficient,
-                        link_state_from_forest)
-from repro.core.interleaved import _resolve
+from repro.core import (build_problem, replay_trace,
+                        construct_tree_efficient, link_state_from_forest)
+from repro.core.peel import exact_coreness, approx_coreness
+from repro.core.hierarchy import build_hierarchy_levels
+from repro.core.interleaved import build_hierarchy_interleaved, _resolve
+from repro.core.nh_baseline import nh_coreness
 
 GRAPHS = {
     "er30": generators.erdos_renyi(30, 0.25, seed=2),

@@ -1,0 +1,327 @@
+"""The front door vs the legacy surface (DESIGN.md §6).
+
+Three contracts:
+  * PARITY — for every golden fixture and every legal NucleusConfig
+    (method, backend, hierarchy) combination, ``decompose()`` produces the
+    same arrays (core, rounds, trace, tree parent/level) as the legacy
+    per-function composition it replaced.
+  * SERIALIZATION — ``to_json()``/``from_json()`` round-trips bit-exact on
+    every golden fixture, and a loaded Decomposition (no NucleusProblem)
+    answers cut/nuclei queries identically.
+  * DEPRECATION — every legacy package-level name still works, warns
+    exactly once, and delegates unchanged.
+"""
+import itertools
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.core as core_pkg
+from repro.graph.generators import golden_suite, GOLDEN_RS
+from repro.core import (build_problem, decompose, NucleusConfig,
+                        Decomposition, ConfigError, make_schedule)
+from repro.core.api import METHODS, BACKENDS, HIERARCHIES
+from repro.core.peel import exact_coreness, approx_coreness
+from repro.core.hierarchy import (build_hierarchy_levels,
+                                  build_hierarchy_basic)
+from repro.core.interleaved import (build_hierarchy_interleaved,
+                                    construct_tree_efficient,
+                                    link_state_from_forest)
+from repro.core.nh_baseline import nh_coreness
+from repro.core.nuclei import nucleus_vertex_sets, _nucleus_vertex_sets_loop
+from repro.core.distributed import sharded_decomposition
+from repro.launch.mesh import make_host_mesh
+
+pytestmark = pytest.mark.fast
+
+GRAPHS = golden_suite()
+CELLS = [(gname, r, s) for gname in GRAPHS for (r, s) in GOLDEN_RS]
+_PROBLEMS = {}
+
+
+def _problem(gname, r, s):
+    key = (gname, r, s)
+    if key not in _PROBLEMS:
+        _PROBLEMS[key] = build_problem(GRAPHS[gname](), r, s)
+    return _PROBLEMS[key]
+
+
+def cells():
+    for (gname, r, s) in CELLS:
+        yield pytest.param(gname, r, s, id=f"{gname}_r{r}s{s}")
+
+
+def parity_cells():
+    """Full-matrix parity runs on every cell, but only the (2, 3) column
+    rides the fast push lane: each remaining cell costs two fresh engine
+    compiles (approx × {plain, fused}) that the seed lane never paid, and
+    the (r, s) axis is already exercised per backend by the golden tests."""
+    for (gname, r, s) in CELLS:
+        marks = [] if (r, s) == (2, 3) else [pytest.mark.slow]
+        yield pytest.param(gname, r, s, id=f"{gname}_r{r}s{s}", marks=marks)
+
+
+# ---------------------------------------------------------------------------
+# Config legality
+# ---------------------------------------------------------------------------
+
+def test_legality_matrix_is_total():
+    """Every (method, backend, hierarchy) triple is either legal or raises
+    ConfigError — and the split matches DESIGN.md §6."""
+    legal = set(NucleusConfig.legal_combinations())
+    for combo in itertools.product(METHODS, BACKENDS, HIERARCHIES):
+        method, backend, hierarchy = combo
+        cfg = NucleusConfig(method=method, backend=backend,
+                            hierarchy=hierarchy)
+        if combo in legal:
+            cfg.validate()
+        else:
+            with pytest.raises(ConfigError):
+                cfg.validate()
+    # the documented matrix: fused needs a compiled loop, replay needs a
+    # trace, nh is exact-only
+    assert ("exact", "gather", "fused") not in legal
+    assert ("exact", "sharded", "replay") not in legal
+    assert ("approx", "nh", "none") not in legal
+    assert ("exact", "nh", "fused") not in legal
+    assert len(legal) == 29
+
+
+def test_config_validation_errors_are_actionable():
+    with pytest.raises(ConfigError, match="1 <= r < s"):
+        NucleusConfig(r=3, s=2).validate()
+    with pytest.raises(ConfigError, match="no compiled loop to fuse"):
+        NucleusConfig(backend="gather", hierarchy="fused").validate()
+    with pytest.raises(ConfigError, match="peel trace"):
+        NucleusConfig(backend="sharded", hierarchy="replay").validate()
+    with pytest.raises(ConfigError, match="sequential exact baseline"):
+        NucleusConfig(backend="nh", method="approx",
+                      hierarchy="none").validate()
+    with pytest.raises(ConfigError, match="Pallas"):
+        NucleusConfig(backend="gather", hierarchy="none",
+                      use_pallas=True).validate()
+    with pytest.raises(ConfigError, match="delta > 0"):
+        NucleusConfig(method="approx", delta=0.0).validate()
+    with pytest.raises(ConfigError, match="compress"):
+        NucleusConfig(compress=True).validate()
+    with pytest.raises(ConfigError, match="mesh"):
+        NucleusConfig(mesh=object(), backend="dense").validate()
+
+
+# ---------------------------------------------------------------------------
+# Parity: decompose() vs the legacy composition, full legal matrix
+# ---------------------------------------------------------------------------
+
+def _legacy_core(problem, method, backend):
+    """The pre-facade way to get (core, rounds, result-or-None)."""
+    if backend in ("dense", "gather"):
+        peel = exact_coreness if method == "exact" else approx_coreness
+        res = peel(problem, backend=backend)
+        return np.asarray(res.core), int(res.rounds), res
+    if backend == "sharded":
+        core, rounds = sharded_decomposition(problem, make_host_mesh(),
+                                             kind=method)
+        return np.asarray(core), int(rounds), None
+    core, rho = nh_coreness(problem)
+    return np.asarray(core), int(rho), None
+
+
+def _legacy_tree(problem, method, backend, hierarchy, core):
+    """The pre-facade way to build each hierarchy variant."""
+    if hierarchy == "two_phase":
+        return build_hierarchy_levels(problem, core)
+    if hierarchy == "basic":
+        return build_hierarchy_basic(problem, core)
+    if backend == "sharded":  # fused
+        _c, _r, parent, L, raw = sharded_decomposition(
+            problem, make_host_mesh(), kind=method, hierarchy=True)
+        return construct_tree_efficient(
+            problem, link_state_from_forest(raw, parent, L))
+    return build_hierarchy_interleaved(problem, mode=method,
+                                       backend=backend, link=hierarchy).tree
+
+
+def _assert_same_tree(got, want, label):
+    assert got.n_leaves == want.n_leaves, label
+    np.testing.assert_array_equal(np.asarray(got.parent),
+                                  np.asarray(want.parent),
+                                  err_msg=f"{label}: tree parent")
+    np.testing.assert_array_equal(np.asarray(got.level),
+                                  np.asarray(want.level),
+                                  err_msg=f"{label}: tree level")
+
+
+def _check_combo(problem, r, s, method, backend, hierarchy):
+    label = f"{method}/{backend}/{hierarchy}"
+    cfg = NucleusConfig(r=r, s=s, method=method, backend=backend,
+                        hierarchy=hierarchy)
+    dec = decompose(problem, cfg)
+    core, rounds, res = _legacy_core(problem, method, backend)
+    np.testing.assert_array_equal(dec.core, core, err_msg=f"{label}: core")
+    assert dec.rounds == rounds, f"{label}: rounds"
+    if res is not None:
+        np.testing.assert_array_equal(dec.order_round,
+                                      np.asarray(res.order_round),
+                                      err_msg=f"{label}: order_round")
+        np.testing.assert_array_equal(dec.peel_value,
+                                      np.asarray(res.peel_value),
+                                      err_msg=f"{label}: peel_value")
+    if hierarchy == "none":
+        assert not dec.has_hierarchy
+        with pytest.raises(ValueError, match="hierarchy='none'"):
+            dec.tree
+        return
+    assert dec.has_hierarchy
+    _assert_same_tree(dec.tree, _legacy_tree(problem, method, backend,
+                                             hierarchy, core), label)
+
+
+@pytest.mark.parametrize("gname,r,s", parity_cells())
+def test_facade_parity_local_backends(gname, r, s):
+    """decompose() == legacy composition for every legal dense/gather/nh
+    combo, on every golden fixture (array-for-array)."""
+    problem = _problem(gname, r, s)
+    if problem.n_r == 0:
+        pytest.skip("no r-cliques")
+    for (method, backend, hierarchy) in NucleusConfig.legal_combinations():
+        if backend == "sharded":
+            continue  # shard_map recompiles per call: slow lane below
+        _check_combo(problem, r, s, method, backend, hierarchy)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "gname,r,s",
+    [pytest.param(g, r, s, id=f"{g}_r{r}s{s}")
+     for (g, r, s) in CELLS if (r, s) == (2, 3)])
+def test_facade_parity_sharded(gname, r, s):
+    """Same parity statement for every legal sharded combo.  Slow lane, and
+    scoped to the (2, 3) cells: every shard_map call recompiles (~seconds),
+    and sharded==dense coreness/forest equality is already pinned on every
+    fixture by test_golden_sharded_backend + test_distributed_core — this
+    test adds the facade-vs-legacy-composition statement per combo."""
+    problem = _problem(gname, r, s)
+    if problem.n_r == 0:
+        pytest.skip("no r-cliques")
+    for (method, backend, hierarchy) in NucleusConfig.legal_combinations():
+        if backend != "sharded":
+            continue
+        _check_combo(problem, r, s, method, backend, hierarchy)
+
+
+# ---------------------------------------------------------------------------
+# Serialization round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname,r,s", cells())
+def test_json_roundtrip_bit_exact(gname, r, s):
+    problem = _problem(gname, r, s)
+    if problem.n_r == 0:
+        pytest.skip("no r-cliques")
+    dec = decompose(problem, NucleusConfig(r=r, s=s, backend="dense",
+                                           hierarchy="fused"))
+    blob = dec.to_json()
+    loaded = Decomposition.from_json(blob)
+    assert loaded.to_json() == blob, "round-trip must be bit-exact"
+    # trace fields + has_hierarchy survive (PeelResult migration contract)
+    assert loaded.has_hierarchy == dec.has_hierarchy
+    assert loaded.rounds == dec.rounds
+    np.testing.assert_array_equal(loaded.core, dec.core)
+    np.testing.assert_array_equal(loaded.order_round, dec.order_round)
+    np.testing.assert_array_equal(loaded.peel_value, dec.peel_value)
+    # a loaded decomposition serves queries without the problem object
+    assert loaded.problem is None
+    for c in sorted(set(int(x) for x in dec.core if x > 0)):
+        np.testing.assert_array_equal(loaded.cut(c), dec.cut(c),
+                                      err_msg=f"cut({c}) after reload")
+        got = loaded.nuclei(c)
+        want = dec.nuclei(c)
+        assert set(got) == set(want)
+        for lab in want:
+            np.testing.assert_array_equal(got[lab].vertices,
+                                          want[lab].vertices)
+            assert got[lab].density == pytest.approx(want[lab].density,
+                                                     nan_ok=True)
+
+
+def test_json_rejects_foreign_blobs():
+    with pytest.raises(ValueError, match="format"):
+        Decomposition.from_json('{"format": "something-else"}')
+
+
+# ---------------------------------------------------------------------------
+# Vectorized nucleus_vertex_sets parity (satellite of this refactor)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname,r,s", cells())
+def test_nucleus_vertex_sets_vectorized_parity(gname, r, s):
+    problem = _problem(gname, r, s)
+    if problem.n_r == 0:
+        pytest.skip("no r-cliques")
+    dec = decompose(problem, NucleusConfig(r=r, s=s, backend="dense",
+                                           hierarchy="fused"))
+    for c in sorted(set(int(x) for x in dec.core if x > 0)) or [1]:
+        labels = dec.cut(c)
+        got = nucleus_vertex_sets(problem, labels)
+        want = _nucleus_vertex_sets_loop(problem, labels)
+        assert set(got) == set(want), f"c={c}: label sets differ"
+        for lab in want:
+            np.testing.assert_array_equal(got[lab], want[lab],
+                                          err_msg=f"c={c} label={lab}")
+
+
+# ---------------------------------------------------------------------------
+# Deprecated wrappers: work, warn exactly once, delegate unchanged
+# ---------------------------------------------------------------------------
+
+def test_deprecated_wrappers_warn_exactly_once():
+    problem = _problem("k4", 1, 2)
+    core = exact_coreness(problem).core
+    tree = build_hierarchy_levels(problem, core)
+    calls = {
+        "exact_coreness": lambda: core_pkg.exact_coreness(problem),
+        "approx_coreness": lambda: core_pkg.approx_coreness(problem),
+        "dense_coreness": lambda: core_pkg.dense_coreness(
+            problem, make_schedule(problem, "exact")),
+        "sharded_decomposition": lambda: core_pkg.sharded_decomposition(
+            problem, make_host_mesh()),
+        "build_hierarchy_levels": lambda: core_pkg.build_hierarchy_levels(
+            problem, core),
+        "build_hierarchy_basic": lambda: core_pkg.build_hierarchy_basic(
+            problem, core),
+        "build_hierarchy_interleaved":
+            lambda: core_pkg.build_hierarchy_interleaved(problem),
+        "nh_coreness": lambda: core_pkg.nh_coreness(problem),
+        "nh_hierarchy": lambda: core_pkg.nh_hierarchy(problem,
+                                                      np.asarray(core)),
+        "nh_full": lambda: core_pkg.nh_full(problem),
+        "cut_hierarchy": lambda: core_pkg.cut_hierarchy(tree, 1),
+        "nuclei_without_hierarchy":
+            lambda: core_pkg.nuclei_without_hierarchy(problem, core, 1),
+    }
+    assert set(calls) == set(core_pkg.DEPRECATED_NAMES), \
+        "every deprecated name must be exercised here"
+    core_pkg._reset_deprecation_warnings()
+    for name, fn in calls.items():
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            fn()   # first call: warns
+            fn()   # second call: silent
+        hits = [w for w in rec if issubclass(w.category, DeprecationWarning)
+                and f"repro.core.{name} is deprecated" in str(w.message)]
+        assert len(hits) == 1, f"{name}: expected exactly one warning, " \
+                               f"got {len(hits)}"
+        assert "decompose" in str(hits[0].message) or \
+            "Decomposition" in str(hits[0].message), \
+            f"{name}: hint must point at the facade"
+
+
+def test_deprecated_wrappers_delegate_unchanged():
+    problem = _problem("two_triangles", 2, 3)
+    core_pkg._reset_deprecation_warnings()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        legacy = core_pkg.exact_coreness(problem)
+    np.testing.assert_array_equal(np.asarray(legacy.core),
+                                  np.asarray(exact_coreness(problem).core))

@@ -5,9 +5,10 @@ canonicalized c-(r,s) nucleus partition at every distinct positive core
 level (a cut of the ANH-EL hierarchy).  Regenerate deliberately with
 `make regen-golden`; the JSON diff is the review artifact.
 
-Checked backends: coreness via gather / dense / dense+pallas(interpret) /
-shard_map; hierarchy via host trace replay, the fused on-device LINK
-fixpoint, two-phase ANH-TE and per-level ANH-BL.
+All checked paths go through the ``decompose()`` facade (the public front
+door): coreness via gather / dense / dense+pallas(interpret) / shard_map;
+hierarchy via host trace replay, the fused on-device LINK fixpoint,
+two-phase ANH-TE and per-level ANH-BL.
 """
 import json
 import os
@@ -16,10 +17,8 @@ import numpy as np
 import pytest
 
 from repro.graph.generators import golden_suite, GOLDEN_RS
-from repro.core import (build_problem, exact_coreness, canonicalize_labels,
-                        build_hierarchy_interleaved, build_hierarchy_levels,
-                        build_hierarchy_basic, cut_hierarchy,
-                        sharded_decomposition)
+from repro.core import (build_problem, canonicalize_labels, decompose,
+                        NucleusConfig)
 
 pytestmark = pytest.mark.fast
 
@@ -44,9 +43,9 @@ def _load(fname):
     return fx, problem
 
 
-def _check_partitions(fx, tree, label=""):
+def _check_partitions(fx, dec, label=""):
     for c_str, want in fx["partitions"].items():
-        got = canonicalize_labels(cut_hierarchy(tree, int(c_str)))
+        got = canonicalize_labels(dec.cut(int(c_str)))
         np.testing.assert_array_equal(
             got, np.asarray(want), err_msg=f"{label} cut level c={c_str}")
 
@@ -61,12 +60,14 @@ def test_golden_coreness_all_backends(fname):
     if p.n_r == 0:
         pytest.skip("no r-cliques")
     want = np.asarray(fx["core"])
-    for label, res in [
-            ("gather", exact_coreness(p, backend="gather")),
-            ("dense", exact_coreness(p, backend="dense")),
-            ("pallas", exact_coreness(p, backend="dense", use_pallas=True)),
+    base = NucleusConfig(hierarchy="none")
+    for label, cfg in [
+            ("gather", {"backend": "gather"}),
+            ("dense", {"backend": "dense"}),
+            ("pallas", {"backend": "dense", "use_pallas": True}),
     ]:
-        np.testing.assert_array_equal(np.asarray(res.core), want,
+        dec = decompose(p, base, **cfg)
+        np.testing.assert_array_equal(dec.core, want,
                                       err_msg=f"backend={label}")
 
 
@@ -75,29 +76,18 @@ def test_golden_hierarchy_all_backends(fname):
     fx, p = _load(fname)
     if p.n_r == 0:
         pytest.skip("no r-cliques")
-    core = exact_coreness(p).core
-    trees = {
-        "replay": build_hierarchy_interleaved(
-            p, backend="dense", link="replay").tree,
-        "fused": build_hierarchy_interleaved(
-            p, backend="dense", link="fused").tree,
-        "te": build_hierarchy_levels(p, core),
-        "bl": build_hierarchy_basic(p, core),
-    }
-    for label, tree in trees.items():
-        _check_partitions(fx, tree, label)
+    for label, hierarchy in [("replay", "replay"), ("fused", "fused"),
+                             ("te", "two_phase"), ("bl", "basic")]:
+        dec = decompose(p, NucleusConfig(backend="dense",
+                                         hierarchy=hierarchy))
+        _check_partitions(fx, dec, label)
 
 
 @pytest.mark.parametrize("fname", fixtures())
 def test_golden_sharded_backend(fname):
-    from repro.launch.mesh import make_host_mesh
-    from repro.core import link_state_from_forest, construct_tree_efficient
     fx, p = _load(fname)
     if p.n_r == 0:
         pytest.skip("no r-cliques")
-    core, _rounds, parent, L, raw = sharded_decomposition(
-        p, make_host_mesh(), kind="exact", hierarchy=True)
-    np.testing.assert_array_equal(np.asarray(core), np.asarray(fx["core"]))
-    state = link_state_from_forest(raw, parent, L)
-    tree = construct_tree_efficient(p, state)
-    _check_partitions(fx, tree)
+    dec = decompose(p, NucleusConfig(backend="sharded", hierarchy="fused"))
+    np.testing.assert_array_equal(dec.core, np.asarray(fx["core"]))
+    _check_partitions(fx, dec)

@@ -6,10 +6,12 @@ pytest.importorskip("hypothesis")  # optional dep: skip, don't abort collection
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.graph import generators, make_graph, connected_components, INT
-from repro.core import (build_problem, exact_coreness, approx_coreness,
-                        build_hierarchy_levels, nh_coreness, nh_hierarchy,
-                        build_hierarchy_interleaved, cut_hierarchy,
-                        nuclei_without_hierarchy, same_partition)
+from repro.core import build_problem, same_partition
+from repro.core.peel import exact_coreness, approx_coreness
+from repro.core.hierarchy import build_hierarchy_levels
+from repro.core.interleaved import build_hierarchy_interleaved
+from repro.core.nh_baseline import nh_coreness, nh_hierarchy
+from repro.core.nuclei import cut_hierarchy, nuclei_without_hierarchy
 
 import jax.numpy as jnp
 

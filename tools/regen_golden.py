@@ -24,8 +24,8 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.graph.generators import golden_suite, GOLDEN_RS  # noqa: E402
-from repro.core import (build_problem, exact_coreness, canonicalize_labels,
-                        build_hierarchy_interleaved, cut_hierarchy)  # noqa: E402
+from repro.core import (build_problem, canonicalize_labels, decompose,
+                        NucleusConfig)  # noqa: E402
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
 
@@ -40,12 +40,16 @@ def fixture(gname: str, r: int, s: int) -> dict:
           "n_s": problem.n_s, "core": [], "partitions": {}}
     if problem.n_r == 0:
         return fx
-    core = np.asarray(exact_coreness(problem, backend="gather").core)
+    # the oracle-pinned path through the front door: eager gather peel +
+    # host trace replay (facade parity with every other backend is what
+    # tests/test_golden.py + tests/test_facade.py check)
+    dec = decompose(problem, NucleusConfig(r=r, s=s, method="exact",
+                                           backend="gather",
+                                           hierarchy="replay"))
+    core = dec.core
     fx["core"] = [int(x) for x in core]
-    res = build_hierarchy_interleaved(problem, mode="exact",
-                                     backend="gather", link="replay")
     for c in sorted(set(int(x) for x in core if x > 0)):
-        labels = canonicalize_labels(cut_hierarchy(res.tree, c))
+        labels = canonicalize_labels(dec.cut(c))
         fx["partitions"][str(c)] = [int(x) for x in labels]
     return fx
 
