@@ -7,7 +7,7 @@
 VERIFY_BUDGET ?= 3300
 FAST_BUDGET ?= 2100
 
-.PHONY: verify verify-fast bench quick-bench regen-golden smoke
+.PHONY: verify verify-fast bench quick-bench regen-golden smoke bench-build
 
 verify:
 	JAX_PLATFORMS=cpu PYTHONPATH=src timeout $(VERIFY_BUDGET) \
@@ -30,6 +30,13 @@ quick-bench:
 # the JSON diff is the review artifact for any intentional semantic change
 regen-golden:
 	JAX_PLATFORMS=cpu PYTHONPATH=src python tools/regen_golden.py
+
+# chunked-incidence-builder CI gate: ba4k with a deliberately tiny memory
+# budget — fails on any deviation from the golden build fingerprint or a
+# >20% budget overshoot (tools/check_build_budget.py; DESIGN.md §7)
+bench-build:
+	JAX_PLATFORMS=cpu PYTHONPATH=src timeout 900 \
+		python tools/check_build_budget.py
 
 # examples + nucleus-serving smoke: drives the decompose() facade end-to-end
 # with the repo's legacy-surface DeprecationWarnings escalated to errors, so

@@ -371,6 +371,55 @@ def facade_lane(quick=False) -> list[str]:
     return rows
 
 
+def build_lane(quick=False) -> list[str]:
+    """Memory-bounded chunked incidence build vs the eager one-burst
+    builder: peak memory + wall-clock vs chunk size (DESIGN.md §7).  Every
+    cell runs in a fresh subprocess (benchmarks.build_child) so high-water
+    marks cannot bleed between configs; the derived column records the
+    peak-RSS delta, the builder's own accounted intermediate peak, and
+    whether the output digest matches the eager build (it must)."""
+    import os
+    from .build_child import run_build_child
+    rows = []
+    MB = 1 << 20
+    cells = [("ba2k", 2, 4, [4 * MB, 1 * MB])] if quick else [
+        ("ba4k", 2, 3, [32 * MB, 8 * MB]),
+        ("ba4k", 2, 4, [16 * MB, 4 * MB]),
+        ("planted3k", 2, 4, [64 * MB, 16 * MB]),
+    ]
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+    def child(graph, r, s, build, budget=None):
+        return run_build_child(root, graph, r, s, build, budget)
+
+    for graph, r, s, budgets in cells:
+        base = f"build/{graph}/r{r}s{s}"
+        eager = child(graph, r, s, "eager")
+        rows.append(row(f"{base}/eager", eager["wall_s"],
+                        f"peak_rss_kb={eager['peak_delta_kb']};"
+                        f"accounted_kb={eager['accounted_bytes'] // 1024};"
+                        f"n_s={eager['n_s']}"))
+        for budget in budgets:
+            ck = child(graph, r, s, "chunked", budget)
+            ok = ck["digest"] == eager["digest"]
+            acc_ratio = eager["accounted_bytes"] / max(ck["accounted_bytes"],
+                                                       1)
+            rss_ratio = (eager["peak_delta_kb"] /
+                         max(ck["peak_delta_kb"], 1)
+                         if eager["peak_delta_kb"] > 0 and
+                         ck["peak_delta_kb"] > 0 else float("nan"))
+            rows.append(row(
+                f"{base}/chunked_{budget // MB}M", ck["wall_s"],
+                f"digest_match={ok};chunks={ck['stats']['n_chunks']};"
+                f"chunk_size={ck['stats']['chunk_size']};"
+                f"peak_rss_kb={ck['peak_delta_kb']};"
+                f"accounted_kb={ck['accounted_bytes'] // 1024};"
+                f"mem_vs_eager_accounted={acc_ratio:.1f}x;"
+                f"mem_vs_eager_rss={rss_ratio:.1f}x;"
+                f"wall_vs_eager={ck['wall_s'] / max(eager['wall_s'], 1e-9):.2f}x"))
+    return rows
+
+
 ALL = {
     "fig6": fig6_variants,
     "fig7": fig7_grid,
@@ -381,4 +430,5 @@ ALL = {
     "engine": engine_lane,
     "hierarchy": hierarchy_lane,
     "facade": facade_lane,
+    "build": build_lane,
 }

@@ -21,6 +21,11 @@ _SUITE: Dict[str, Callable[[], Graph]] = {
         1_000, [24, 18, 14, 10], 0.01, seed=3),
     "ba4k": lambda: generators.barabasi_albert(4_000, 8, seed=7),
     "ba5k": lambda: generators.barabasi_albert(5_000, 6, seed=4),
+    # nucleus-rich at build-bench scale: the planted 100-clique makes the
+    # eager (2,4) expansion's intermediate candidate arrays ~100 MB — the
+    # memory-headroom demo for the chunked incidence builder
+    "planted3k": lambda: generators.planted_cliques(
+        3_000, [100, 80, 60], 0.02, seed=5),
 }
 
 _CACHE: Dict[str, Graph] = {}

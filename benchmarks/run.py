@@ -10,9 +10,11 @@ The `engine` lane (and the engine rows inside fig8) time the compiled
 the `hierarchy` lane times fused-on-device ANH-EL against host trace-replay
 and the two-phase build; the `facade` lane records the decompose-once/
 query-many serving claim (`.cut(c)` sweep qps vs from-scratch connectivity,
-plus the serialized-artifact load cost).  Compile time is excluded via a
-warmup call, so the rows measure steady-state wall-clock (what
-EXPERIMENTS.md records).
+plus the serialized-artifact load cost); the `build` lane compares the
+memory-bounded chunked incidence builder against the eager one (peak
+memory + wall-clock vs chunk size, fresh subprocess per cell).  Compile
+time is excluded via a warmup call, so the rows measure steady-state
+wall-clock (what EXPERIMENTS.md records).
 """
 from __future__ import annotations
 

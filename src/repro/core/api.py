@@ -36,7 +36,7 @@ import numpy as np
 
 from .hierarchy import (HierarchyTree, build_hierarchy_basic,
                         build_hierarchy_levels)
-from .incidence import NucleusProblem, build_problem
+from .incidence import BUILDS, NucleusProblem, build_problem
 from .interleaved import (construct_tree_efficient, link_state_from_forest,
                           replay_trace)
 from .nh_baseline import nh_coreness
@@ -74,6 +74,14 @@ class NucleusConfig:
       mesh        — jax Mesh for the sharded backend (None = whatever this
                     host has, resolved at decompose() time).
       compress    — int16 + error-feedback delta all-reduce (sharded only).
+      build       — incidence builder: "eager" (one-burst expansion) or
+                    "chunked" (memory-bounded source-vertex chunks +
+                    two-pass count-then-fill assembly; DESIGN.md §7).
+                    Both are bit-identical; chunked bounds peak memory.
+      memory_budget_bytes — chunked-build intermediate-memory budget
+                    (None = a 256 MiB default); sets the chunk size.
+      build_chunk_size — explicit source vertices per chunk (overrides the
+                    budget-derived size; pins the sparse chunked path).
     """
 
     r: int = 2
@@ -85,6 +93,9 @@ class NucleusConfig:
     use_pallas: Optional[bool] = None
     mesh: Optional[Any] = None
     compress: bool = False
+    build: str = "eager"
+    memory_budget_bytes: Optional[int] = None
+    build_chunk_size: Optional[int] = None
 
     def validate(self) -> "NucleusConfig":
         """Reject unsupported combinations with actionable errors."""
@@ -136,6 +147,27 @@ class NucleusConfig:
             raise ConfigError(
                 f"a mesh only applies to backend='sharded', got "
                 f"backend={self.backend!r}")
+        if self.build not in BUILDS:
+            raise ConfigError(
+                f"build={self.build!r}; expected one of {BUILDS}")
+        if self.memory_budget_bytes is not None:
+            if self.build != "chunked":
+                raise ConfigError(
+                    "memory_budget_bytes sizes the chunked incidence "
+                    "builder; set build='chunked' or drop the budget")
+            if self.memory_budget_bytes <= 0:
+                raise ConfigError(
+                    f"memory_budget_bytes must be positive, got "
+                    f"{self.memory_budget_bytes}")
+        if self.build_chunk_size is not None:
+            if self.build != "chunked":
+                raise ConfigError(
+                    "build_chunk_size is the chunked builder's chunk; set "
+                    "build='chunked' or drop it")
+            if self.build_chunk_size <= 0:
+                raise ConfigError(
+                    f"build_chunk_size must be positive, got "
+                    f"{self.build_chunk_size}")
         return self
 
     @classmethod
@@ -517,7 +549,10 @@ def decompose(graph_or_problem, config: Optional[NucleusConfig] = None,
             config = dataclasses.replace(config, r=problem.r, s=problem.s)
     else:
         config.validate()
-        problem = build_problem(graph_or_problem, config.r, config.s)
+        problem = build_problem(
+            graph_or_problem, config.r, config.s, build=config.build,
+            memory_budget_bytes=config.memory_budget_bytes,
+            chunk_size=config.build_chunk_size)
     config.validate()
 
     fused = config.hierarchy == "fused"

@@ -1,7 +1,8 @@
 from .container import Graph, Digraph, make_graph, orient, csr_from_pairs, PAD, INT
 from .orientation import degree_rank, approx_degeneracy_rank
 from .cliques import (CliqueLevels, list_cliques, count_cliques, unique_rows,
-                      sort_join, lexsort_rows, subset_columns)
+                      sort_join, lexsort_rows, subset_columns, expand_levels,
+                      iter_clique_chunks)
 from .connectivity import connected_components, pointer_jump
 from .unionfind import (BatchedUnionFind, uf_create, uf_find_all,
                         uf_union_edges)

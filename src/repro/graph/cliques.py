@@ -20,6 +20,7 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .container import Digraph, Graph, INT, PAD, orient
 from .orientation import degree_rank
@@ -52,19 +53,27 @@ class CliqueLevels:
         return int(self.levels[t].shape[0])
 
 
-def list_cliques(g: Graph, ks, rank: Optional[jnp.ndarray] = None,
-                 dg: Optional[Digraph] = None) -> CliqueLevels:
-    """List all t-cliques for each t in `ks` (max(ks) drives the expansion)."""
+def expand_levels(dg: Digraph, seeds: jnp.ndarray, ks):
+    """Level-synchronous expansion from the level-1 `seeds` vertices.
+
+    Returns ``({t: (N_t, t) rows for t in ks}, peak_bytes)`` where rows are
+    ascending vertex ids and ``peak_bytes`` is the largest intermediate
+    footprint (verts + candidate arrays) any level materialized.  Because the
+    DAG orientation gives every clique a unique minimum-rank discovery path,
+    expansions from disjoint seed sets are independent and duplicate-free:
+    concatenating per-seed-range outputs in seed order reproduces the
+    all-vertices expansion row-for-row.  This is the chunking invariant the
+    memory-bounded incidence builder relies on (DESIGN.md §7).
+    """
     ks = sorted(set(int(k) for k in ks))
     kmax = ks[-1]
-    if dg is None:
-        dg = orient(g, degree_rank(g) if rank is None else rank)
     out: Dict[int, jnp.ndarray] = {}
-
-    # Level 1: every vertex, candidates = its out-neighborhood.
-    verts = jnp.arange(g.n, dtype=INT)[:, None]
-    cand = dg.adj
-    ncand = dg.outdeg
+    verts = seeds.astype(INT)[:, None]
+    if int(seeds.shape[0]) == dg.n:  # full frontier: no gather copy needed
+        cand, ncand = dg.adj, dg.outdeg
+    else:
+        cand, ncand = dg.adj[seeds], dg.outdeg[seeds]
+    peak = int(verts.nbytes) + int(cand.nbytes) + int(ncand.nbytes)
     if 1 in ks:
         out[1] = verts
 
@@ -76,7 +85,7 @@ def list_cliques(g: Graph, ks, rank: Optional[jnp.ndarray] = None,
             for kk in ks:
                 if kk >= t:
                     out[kk] = jnp.zeros((0, kk), INT)
-            return CliqueLevels(out)
+            return out, peak
         counts = ncand
         total = int(jnp.sum(counts))
         starts = jnp.cumsum(counts) - counts
@@ -88,8 +97,140 @@ def list_cliques(g: Graph, ks, rank: Optional[jnp.ndarray] = None,
         if t in ks:
             out[t] = jnp.sort(verts, axis=1)
         if t < kmax:
-            cand, ncand = _intersect_rows(cand[rep], counts[rep], c, dg.adj, dg.outdeg)
+            cand, ncand = _intersect_rows(cand[rep], counts[rep], c, dg.adj,
+                                          dg.outdeg)
+        # verts[rep]+concat, plus the intersect's gathers/position/sort
+        # transients (~4 candidate-width arrays) — mirrors the np meter
+        level_bytes = 2 * int(verts.nbytes) + (4 * int(cand.nbytes) +
+                                               int(ncand.nbytes)
+                                               if t < kmax else 0)
+        peak = max(peak, level_bytes)
+    return out, peak
+
+
+def list_cliques(g: Graph, ks, rank: Optional[jnp.ndarray] = None,
+                 dg: Optional[Digraph] = None) -> CliqueLevels:
+    """List all t-cliques for each t in `ks` (max(ks) drives the expansion)."""
+    if dg is None:
+        dg = orient(g, degree_rank(g) if rank is None else rank)
+    out, _ = expand_levels(dg, jnp.arange(g.n, dtype=INT), ks)
     return CliqueLevels(out)
+
+
+def _intersect_rows_np(cand: np.ndarray, w: np.ndarray, adj: np.ndarray,
+                       outdeg: np.ndarray):
+    """Numpy twin of ``_intersect_rows`` (same results on the same inputs).
+
+    Batched binary search via a single global ``searchsorted``: each row of
+    `adj[w]` is ascending and PAD < 2^32, so offsetting row i by i<<32 makes
+    the flattened array globally sorted and per-row searches exact.
+    """
+    rows = adj[w]  # (N, da)
+    N, da = rows.shape
+    base = np.arange(N, dtype=np.int64) << 32
+    flat = (rows.astype(np.int64) + base[:, None]).ravel()
+    q = (cand.astype(np.int64) + base[:, None]).ravel()
+    pos = np.searchsorted(flat, q).reshape(N, -1) - \
+        (np.arange(N, dtype=np.int64) * da)[:, None]
+    pos = np.clip(pos, 0, da - 1)
+    hit = (np.take_along_axis(rows, pos, axis=1) == cand) & \
+        (pos < outdeg[w][:, None]) & (cand != PAD)
+    kept = np.where(hit, cand, PAD).astype(np.int32)
+    kept.sort(axis=1)
+    nkept = (kept != PAD).sum(axis=1).astype(np.int32)
+    # the transients this call held live (the int64 flat/q copies dominate):
+    # what the chunked builder's memory meter must charge
+    work_bytes = rows.nbytes + flat.nbytes + q.nbytes + pos.nbytes + \
+        kept.nbytes
+    return kept, nkept, work_bytes
+
+
+def _expand_levels_np(adj: np.ndarray, outdeg: np.ndarray, seeds: np.ndarray,
+                      ks):
+    """Numpy twin of ``expand_levels`` for the host-side chunked builder.
+
+    Same discovery order, same rows, same dtypes — pure-integer ops with no
+    XLA dispatch, so thousands of small chunks stay cheap on CPU.
+    """
+    ks = sorted(set(int(k) for k in ks))
+    kmax = ks[-1]
+    out = {}
+    verts = seeds.astype(np.int32)[:, None]
+    cand = adj[seeds]
+    ncand = outdeg[seeds]
+    peak = verts.nbytes + cand.nbytes + ncand.nbytes
+    if 1 in ks:
+        out[1] = verts
+    for t in range(2, kmax + 1):
+        keep = ncand > 0
+        verts, cand, ncand = verts[keep], cand[keep], ncand[keep]
+        if verts.shape[0] == 0:
+            for kk in ks:
+                if kk >= t:
+                    out[kk] = np.zeros((0, kk), np.int32)
+            return out, peak
+        counts = ncand
+        rep = np.repeat(np.arange(verts.shape[0], dtype=np.int64), counts)
+        starts = np.cumsum(counts) - counts
+        pos = np.arange(rep.size, dtype=np.int64) - starts[rep]
+        c = cand[rep, pos]
+        cand_rep = cand[rep]
+        verts = np.concatenate([verts[rep], c[:, None]], axis=1)
+        if t in ks:
+            out[t] = np.sort(verts, axis=1)
+        work_bytes = 0
+        if t < kmax:
+            cand, ncand, work_bytes = _intersect_rows_np(cand_rep, c, adj,
+                                                         outdeg)
+        level_bytes = 2 * verts.nbytes + rep.nbytes + pos.nbytes + \
+            cand_rep.nbytes + work_bytes
+        peak = max(peak, level_bytes)
+        del cand_rep
+    return out, peak
+
+
+def iter_clique_chunks(dg: Digraph, ks, chunk_size: int):
+    """Chunked clique listing: expand `chunk_size` source vertices at a time.
+
+    Yields ``(start, levels, peak_bytes)`` per contiguous seed range, with
+    levels as host numpy arrays.  Chunks are independent and duplicate-free
+    (see ``expand_levels``); concatenating each level over chunks in yield
+    order is row-identical to ``list_cliques``.  Peak live memory is one
+    chunk's expansion instead of the whole graph's.
+    """
+    chunk_size = max(1, int(chunk_size))
+    adj = np.asarray(dg.adj)
+    outdeg = np.asarray(dg.outdeg)
+    for start in range(0, dg.n, chunk_size):
+        seeds = np.arange(start, min(start + chunk_size, dg.n),
+                          dtype=np.int32)
+        levels, peak = _expand_levels_np(adj, outdeg, seeds, ks)
+        yield start, levels, peak
+
+
+def sort_join_np(table: np.ndarray, queries: np.ndarray) -> np.ndarray:
+    """Numpy twin of ``sort_join`` (same ids on the same inputs).
+
+    Used by the chunked incidence builder so per-block joins run without
+    XLA dispatch; the jnp version stays the canonical device path.
+    """
+    T, Q = int(table.shape[0]), int(queries.shape[0])
+    if Q == 0:
+        return np.zeros((0,), np.int32)
+    if T == 0:
+        return np.full((Q,), -1, np.int32)
+    comb_rows = np.concatenate([table, queries], axis=0)
+    flag = np.concatenate([np.zeros((T,), np.int32), np.ones((Q,), np.int32)])
+    keys = (flag,) + tuple(comb_rows[:, c]
+                           for c in reversed(range(comb_rows.shape[1])))
+    order = np.lexsort(keys)
+    ids_sorted = np.where(order < T, order, -1).astype(np.int64)
+    filled = np.maximum.accumulate(ids_sorted)
+    matched_rows = table[np.clip(filled, 0, T - 1)]
+    ok = (filled >= 0) & (matched_rows == comb_rows[order]).all(axis=1)
+    ids_sorted = np.where(ok, filled, -1).astype(np.int32)
+    inv = np.argsort(order)
+    return ids_sorted[inv[T:]]
 
 
 def count_cliques(g: Graph, k: int, rank: Optional[jnp.ndarray] = None) -> int:
@@ -151,6 +292,11 @@ def sort_join(table: jnp.ndarray, queries: jnp.ndarray) -> jnp.ndarray:
     T, Q = int(table.shape[0]), int(queries.shape[0])
     if Q == 0:
         return jnp.zeros((0,), INT)
+    if T == 0:
+        # Empty table: nothing can match.  (The general path below would
+        # index table[0] on a zero-row array — the degenerate input every
+        # r-clique-free chunk of the chunked builder produces.)
+        return jnp.full((Q,), -1, INT)
     comb = jnp.concatenate([table, queries], axis=0)
     flag = jnp.concatenate([jnp.zeros((T,), INT), jnp.ones((Q,), INT)])
     keys = (flag,) + tuple(comb[:, c] for c in reversed(range(comb.shape[1])))

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 from . import ref
 from .flash_attention import flash_attention
 from .segment_sum import segment_sum_sorted
-from .tricount import tricount_per_edge, triangle_count
+from .tricount import (tricount_per_edge, tricount_oriented as
+                       _tricount_oriented, triangle_count)
 
 
 def _pad_to(x: jnp.ndarray, axis: int, multiple: int, value=0):
@@ -30,13 +31,17 @@ def _pad_to(x: jnp.ndarray, axis: int, multiple: int, value=0):
 @partial(jax.jit, static_argnames=("tile", "interpret"))
 def tricount(adj: jnp.ndarray, tile: int = 128,
              interpret: bool | None = None) -> jnp.ndarray:
-    """Per-edge triangle counts with padding to the tile size."""
-    n = adj.shape[0]
-    a, pad = _pad_to(adj, 0, tile)
-    a, _ = _pad_to(a, 1, tile)
-    out = tricount_per_edge(a.astype(jnp.float32), tile=tile,
-                            interpret=interpret)
-    return out[:n, :n]
+    """Per-edge triangle counts (the kernel pads to the tile size itself)."""
+    return tricount_per_edge(adj.astype(jnp.float32), tile=tile,
+                             interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("tile", "interpret"))
+def tricount_oriented(adj: jnp.ndarray, tile: int = 128,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Per-DAG-edge 3-clique extension counts (D @ Dᵀ) ⊙ D, any n."""
+    return _tricount_oriented(adj.astype(jnp.float32), tile=tile,
+                              interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k",

@@ -14,6 +14,11 @@ def triangle_count_ref(adj: jnp.ndarray) -> jnp.ndarray:
     return jnp.sum(tricount_per_edge_ref(adj)) / 6.0
 
 
+def tricount_oriented_ref(adj: jnp.ndarray) -> jnp.ndarray:
+    """(D @ Dᵀ) ⊙ D: per-DAG-edge common-out-neighbor counts."""
+    return (adj @ adj.T) * adj
+
+
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                   causal: bool = True) -> jnp.ndarray:
     """Materialized-softmax attention. q/k/v: (B, H, S, D)."""

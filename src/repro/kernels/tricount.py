@@ -11,9 +11,21 @@ f32 scratch accumulator and masks by the A[i,j] tile on the last k step — one
 HBM pass over A per output tile row/col, no (n, n) f32 intermediate.
 Tiles default to (128, 128): the MXU systolic shape.
 
-This kernel is the TPU analogue of the paper's intersection loop, and is what
-`repro.graph.cliques` would call on-device for r=2, s=3; ops.py exposes the
-jitted wrapper and ref.py the pure-jnp oracle used by the allclose tests.
+Two entry points share the kernel body:
+
+  * ``tricount_per_edge(A)``   — (A @ A) ⊙ A on a symmetric adjacency (the
+    undirected per-edge triangle counts).
+  * ``tricount_oriented(D)``   — (D @ Dᵀ) ⊙ D on a DAG adjacency: for each
+    oriented edge u→v the count is |N⁺(u) ∩ N⁺(v)|, i.e. the number of
+    3-clique extensions of that edge under the low-out-degree orientation.
+    This is the count pass of the chunked (2,3) incidence builder
+    (DESIGN.md §7): allocation sizes come off the MXU without ever
+    materializing a candidate array.
+
+Arbitrary n is handled by zero-padding to the tile boundary inside the
+wrapper; pad rows/cols contribute nothing because the output is masked by
+the (zero-padded) adjacency tile.  ops.py exposes the jitted wrappers and
+ref.py the pure-jnp oracles used by the allclose tests.
 """
 from __future__ import annotations
 
@@ -43,17 +55,21 @@ def _tricount_kernel(a_ik_ref, a_kj_ref, a_ij_ref, out_ref, acc_ref, *,
         out_ref[...] = acc_ref[...] * a_ij_ref[...]
 
 
-def tricount_per_edge(adj: jnp.ndarray, tile: int = TILE,
-                      interpret: bool | None = None) -> jnp.ndarray:
-    """Per-pair triangle counts (A @ A) ⊙ A.
+def _pad_square(x: jnp.ndarray, tile: int) -> jnp.ndarray:
+    """Zero-pad an (n, n) matrix to the next tile multiple on both axes."""
+    n = x.shape[0]
+    pad = (-n) % tile
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad), (0, pad)))
 
-    adj: (n, n) float32 in {0,1}, symmetric, zero diagonal, n % tile == 0.
-    Returns (n, n) float32 counts (count[u,v] = #common neighbors if edge).
-    """
+
+def _masked_matmul(x: jnp.ndarray, y: jnp.ndarray, mask: jnp.ndarray,
+                   tile: int, interpret: bool | None) -> jnp.ndarray:
+    """(x @ y) ⊙ mask, tiled; all operands (n, n) f32, n already padded."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
-    n = adj.shape[0]
-    assert adj.shape == (n, n) and n % tile == 0, adj.shape
+    n = x.shape[0]
     n_b = n // tile
     return pl.pallas_call(
         partial(_tricount_kernel, n_k=n_b),
@@ -67,7 +83,37 @@ def tricount_per_edge(adj: jnp.ndarray, tile: int = TILE,
         out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
         scratch_shapes=[pltpu.VMEM((tile, tile), jnp.float32)],
         interpret=interpret,
-    )(adj, adj, adj)
+    )(x, y, mask)
+
+
+def tricount_per_edge(adj: jnp.ndarray, tile: int = TILE,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Per-pair triangle counts (A @ A) ⊙ A.
+
+    adj: (n, n) float32 in {0,1}, symmetric, zero diagonal; any n (the
+    wrapper zero-pads to the tile boundary — pad rows are masked out by the
+    zero adjacency tile).  Returns (n, n) float32 counts
+    (count[u,v] = #common neighbors if edge).
+    """
+    n = adj.shape[0]
+    assert adj.shape == (n, n), adj.shape
+    a = _pad_square(adj, tile)
+    return _masked_matmul(a, a, a, tile, interpret)[:n, :n]
+
+
+def tricount_oriented(adj: jnp.ndarray, tile: int = TILE,
+                      interpret: bool | None = None) -> jnp.ndarray:
+    """Per-DAG-edge extension counts (D @ Dᵀ) ⊙ D.
+
+    adj: (n, n) float32 in {0,1}, the *oriented* adjacency (adj[u, v] = 1 iff
+    u→v).  Returns (n, n) float32 with out[u, v] = |N⁺(u) ∩ N⁺(v)| when u→v
+    (0 elsewhere) — exactly the number of triangles the chunked (2,3)
+    builder will list for that edge, each triangle counted once.
+    """
+    n = adj.shape[0]
+    assert adj.shape == (n, n), adj.shape
+    a = _pad_square(adj, tile)
+    return _masked_matmul(a, a.T, a, tile, interpret)[:n, :n]
 
 
 def triangle_count(adj: jnp.ndarray, tile: int = TILE,

@@ -1,0 +1,235 @@
+"""Chunked vs eager incidence builder: bit-identity + degenerate inputs.
+
+The memory-bounded chunked builder (DESIGN.md §7) must be byte-identical to
+the eager one on every array of the ``NucleusProblem`` — r-clique table,
+incidence ids, mem-CSR, initial degrees — for every chunk size, including
+the degenerate chunks (empty graphs, r-clique-free seed ranges) that exposed
+the ``sort_join``/T=0 and tile-alignment bugs this suite pins.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.graph import generators
+from repro.graph.cliques import (iter_clique_chunks, list_cliques, sort_join,
+                                 sort_join_np)
+from repro.graph.orientation import degree_rank
+from repro.core import decompose, NucleusConfig, canonicalize_labels
+from repro.core.incidence import (build_problem, pick_rank,
+                                  _derive_chunk_size)
+
+pytestmark = pytest.mark.fast
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "golden")
+
+GRAPHS = {
+    "bowtie_plus": generators.tiny_named("bowtie_plus"),
+    "er20": generators.erdos_renyi(20, 0.35, seed=1),
+    "planted": generators.planted_cliques(40, [8, 6, 5], 0.05, seed=3),
+    "ba60": generators.barabasi_albert(60, 4, seed=4),
+    "empty10": generators.erdos_renyi(10, 0.0, seed=0),
+}
+RS = [(1, 2), (2, 3), (2, 4), (3, 4)]
+ARRAYS = ("r_cliques", "inc_rid", "mem_offsets", "mem_sids", "deg0")
+
+_EAGER = {}
+
+
+def _eager(gname, r, s):
+    key = (gname, r, s)
+    if key not in _EAGER:
+        _EAGER[key] = build_problem(GRAPHS[gname], r, s)
+    return _EAGER[key]
+
+
+def assert_problems_identical(e, c):
+    assert e.orientation == c.orientation
+    for f in ARRAYS:
+        a, b = np.asarray(getattr(e, f)), np.asarray(getattr(c, f))
+        assert a.dtype == b.dtype, (f, a.dtype, b.dtype)
+        assert a.shape == b.shape, (f, a.shape, b.shape)
+        np.testing.assert_array_equal(a, b, err_msg=f)
+
+
+def cells():
+    for gname in GRAPHS:
+        for (r, s) in RS:
+            yield pytest.param(gname, r, s, id=f"{gname}-r{r}s{s}")
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity across chunk sizes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk", [1, 7, None])
+@pytest.mark.parametrize("gname,r,s", cells())
+def test_chunked_matches_eager(gname, r, s, chunk):
+    e = _eager(gname, r, s)
+    c = build_problem(GRAPHS[gname], r, s, build="chunked", chunk_size=chunk)
+    assert_problems_identical(e, c)
+    if chunk == 1:
+        assert c.build_stats["n_chunks"] == GRAPHS[gname].n
+
+
+@pytest.mark.parametrize("gname", ["er20", "planted", "ba60"])
+def test_chunked_fastpath_23_matches_eager(gname):
+    """The dense (2,3) count pass (Pallas kernel / jnp oracle) and the
+    sparse chunked path both reproduce the eager build exactly."""
+    e = _eager(gname, 2, 3)
+    fast = build_problem(GRAPHS[gname], 2, 3, build="chunked", fastpath=True)
+    slow = build_problem(GRAPHS[gname], 2, 3, build="chunked", fastpath=False)
+    assert fast.build_stats["fastpath"] and not slow.build_stats["fastpath"]
+    assert_problems_identical(e, fast)
+    assert_problems_identical(e, slow)
+
+
+def test_fastpath_rejected_off_23():
+    with pytest.raises(ValueError, match=r"fastpath.*\(2, 4\)"):
+        build_problem(GRAPHS["er20"], 2, 4, build="chunked", fastpath=True)
+
+
+def test_budget_derives_multiple_chunks():
+    """A small budget forces real chunking; output is still identical and
+    the accounted intermediate peak respects the budget."""
+    g = GRAPHS["ba60"]
+    budget = 50_000
+    c = build_problem(g, 2, 4, build="chunked", memory_budget_bytes=budget)
+    assert_problems_identical(_eager("ba60", 2, 4), c)
+    st = c.build_stats
+    assert st["n_chunks"] > 1
+    if st["chunk_size"] > 1:  # above the 1-seed floor the budget binds
+        assert st["peak_intermediate_bytes"] <= budget * 1.2, st
+
+
+def test_chunk_size_derivation_clamps():
+    g = GRAPHS["ba60"]
+    dg, _ = pick_rank(g)
+    assert _derive_chunk_size(dg, 4, 1) == 1           # floor
+    assert _derive_chunk_size(dg, 2, 10**12) == g.n    # ceiling
+    lo = _derive_chunk_size(dg, 4, 100_000)
+    hi = _derive_chunk_size(dg, 4, 10_000_000)
+    assert 1 <= lo <= hi <= g.n                        # monotone in budget
+
+
+# ---------------------------------------------------------------------------
+# Orientation metadata (the pick_rank bugfix)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname,r,s", cells())
+def test_orientation_recorded_and_stable(gname, r, s):
+    e = _eager(gname, r, s)
+    c = build_problem(GRAPHS[gname], r, s, build="chunked")
+    assert e.orientation in ("degree", "approx_degeneracy")
+    assert e.orientation == c.orientation
+
+
+def test_caller_rank_recorded():
+    g = GRAPHS["er20"]
+    rank = degree_rank(g)
+    e = build_problem(g, 2, 3, rank=rank)
+    c = build_problem(g, 2, 3, rank=rank, build="chunked")
+    assert e.orientation == "caller" and c.orientation == "caller"
+    assert_problems_identical(e, c)
+
+
+# ---------------------------------------------------------------------------
+# Degenerate inputs (the sort_join T=0 regression)
+# ---------------------------------------------------------------------------
+
+def test_sort_join_empty_table():
+    queries = jnp.asarray([[0, 1], [2, 3]], jnp.int32)
+    empty = jnp.zeros((0, 2), jnp.int32)
+    np.testing.assert_array_equal(np.asarray(sort_join(empty, queries)),
+                                  [-1, -1])
+    np.testing.assert_array_equal(sort_join_np(np.zeros((0, 2), np.int32),
+                                               np.asarray(queries)),
+                                  [-1, -1])
+    # empty queries stay empty either way
+    assert sort_join(empty, jnp.zeros((0, 2), jnp.int32)).shape == (0,)
+    assert sort_join_np(np.zeros((0, 2), np.int32),
+                        np.zeros((0, 2), np.int32)).shape == (0,)
+
+
+def test_sort_join_np_matches_jnp():
+    rng = np.random.default_rng(0)
+    table = np.unique(rng.integers(0, 30, size=(40, 3)).astype(np.int32),
+                      axis=0)
+    order = np.lexsort(tuple(table[:, c] for c in reversed(range(3))))
+    table = table[order]
+    queries = rng.integers(0, 30, size=(64, 3)).astype(np.int32)
+    queries[:8] = table[:8]  # guaranteed hits
+    np.testing.assert_array_equal(
+        sort_join_np(table, queries),
+        np.asarray(sort_join(jnp.asarray(table), jnp.asarray(queries))))
+
+
+def test_empty_graph_chunked():
+    g = GRAPHS["empty10"]
+    for (r, s) in RS:
+        e = build_problem(g, r, s)
+        c = build_problem(g, r, s, build="chunked", chunk_size=3)
+        assert_problems_identical(e, c)
+
+
+def test_chunk_iterator_concatenates_to_list_cliques():
+    g = GRAPHS["planted"]
+    dg, _ = pick_rank(g)
+    whole = list_cliques(g, [2, 4], dg=dg)
+    for chunk in (1, 9, g.n):
+        parts = {2: [], 4: []}
+        for _start, levels, peak in iter_clique_chunks(dg, [2, 4], chunk):
+            assert peak >= 0
+            for t in (2, 4):
+                parts[t].append(levels[t])
+        for t in (2, 4):
+            got = np.concatenate(parts[t], axis=0)
+            np.testing.assert_array_equal(got, np.asarray(whole.levels[t]))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end decompose() parity against the golden fixtures
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname,r,s", [("er20", 1, 2), ("planted40", 2, 3),
+                                       ("k4", 3, 4)])
+def test_decompose_chunked_matches_golden(gname, r, s):
+    with open(os.path.join(GOLDEN_DIR, f"{gname}_r{r}s{s}.json")) as f:
+        fx = json.load(f)
+    g = generators.golden_suite()[gname]()
+    dec = decompose(g, NucleusConfig(r=r, s=s, method="exact",
+                                     backend="gather", hierarchy="replay",
+                                     build="chunked",
+                                     memory_budget_bytes=1 << 16))
+    assert dec.n_r == fx["n_r"]
+    np.testing.assert_array_equal(dec.core, fx["core"])
+    for c_str, want in fx["partitions"].items():
+        got = canonicalize_labels(dec.cut(int(c_str)))
+        np.testing.assert_array_equal(got, want, err_msg=f"cut({c_str})")
+
+
+# ---------------------------------------------------------------------------
+# Property test: random graphs x (r, s) x chunk sizes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_chunked_equivalence_hypothesis():
+    pytest.importorskip("hypothesis")  # optional dep: skip, don't fail
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(2, 28), st.floats(0.05, 0.5),
+           st.integers(0, 10_000), st.sampled_from(RS),
+           st.sampled_from([1, 7, 0]))
+    def inner(n, p, seed, rs, chunk):
+        r, s = rs
+        g = generators.erdos_renyi(n, p, seed=seed)
+        e = build_problem(g, r, s)
+        c = build_problem(g, r, s, build="chunked",
+                          chunk_size=(chunk or g.n))
+        assert_problems_identical(e, c)
+
+    inner()

@@ -1,0 +1,101 @@
+"""CI gate for the memory-bounded chunked incidence builder (`make bench-build`).
+
+Runs the chunked builder on ba4k/(2,3) with a deliberately tiny memory
+budget in a fresh subprocess (benchmarks.build_child) and FAILS if:
+
+  1. the output digest deviates from the committed golden fingerprint
+     (tests/golden/build/ba4k_build_r2s3.json) — the bit-identity contract;
+  2. the output digest deviates from an eager build run in the same job
+     (catches the case where both builders drift together *and* apart);
+  3. peak memory exceeds the budget by >20%:
+       - hard on the builder's accounted intermediate peak (deterministic),
+       - on the measured peak-RSS delta with an allocator slack
+         (RSS_SLACK_KB) on top, since the Python/XLA allocator keeps pools
+         the builder cannot see.  The slack is a constant, not a ratio, so
+         a real regression still trips it.
+
+`--regen` rewrites the golden fingerprint file (the diff is the review
+artifact, same contract as `make regen-golden`).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+GRAPH, R, S = "ba4k", 2, 3
+BUDGET = 8 << 20          # deliberately tiny: forces chunking on ba4k
+TOLERANCE = 1.2           # the ">20%" gate
+RSS_SLACK_KB = 64 << 10   # allocator pools + numpy scratch, not builder state
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+# lives under tests/golden/build/ (not tests/golden/*.json directly: the
+# decomposition-fixture suite globs that directory and pins its count)
+GOLDEN = os.path.join(ROOT, "tests", "golden", "build",
+                      f"{GRAPH}_build_r{R}s{S}.json")
+
+
+def child(build: str, budget: int | None = None) -> dict:
+    sys.path.insert(0, ROOT)
+    from benchmarks.build_child import run_build_child
+    return run_build_child(ROOT, GRAPH, R, S, build, budget)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--regen", action="store_true",
+                    help="rewrite the golden fingerprint file")
+    args = ap.parse_args()
+
+    eager = child("eager")
+    chunked = child("chunked", BUDGET)
+    print(f"eager:   wall={eager['wall_s']:.2f}s "
+          f"accounted={eager['accounted_bytes']} digest={eager['digest'][:16]}")
+    print(f"chunked: wall={chunked['wall_s']:.2f}s budget={BUDGET} "
+          f"chunks={chunked['stats']['n_chunks']} "
+          f"accounted={chunked['accounted_bytes']} "
+          f"peak_rss_kb={chunked['peak_delta_kb']} "
+          f"digest={chunked['digest'][:16]}")
+
+    if args.regen:
+        fp = {"graph": GRAPH, "r": R, "s": S, "budget": BUDGET,
+              "n_r": eager["n_r"], "n_s": eager["n_s"],
+              "orientation": eager["orientation"],
+              "digest": eager["digest"]}
+        with open(GOLDEN, "w") as f:
+            json.dump(fp, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {os.path.relpath(GOLDEN, ROOT)}")
+
+    failures = []
+    with open(GOLDEN) as f:
+        golden = json.load(f)
+    if chunked["digest"] != golden["digest"]:
+        failures.append(
+            f"chunked digest {chunked['digest']} != golden "
+            f"{golden['digest']} ({os.path.relpath(GOLDEN, ROOT)})")
+    if chunked["digest"] != eager["digest"]:
+        failures.append(
+            f"chunked digest {chunked['digest']} != eager {eager['digest']}")
+    limit = BUDGET * TOLERANCE
+    if chunked["accounted_bytes"] > limit and \
+            chunked["stats"]["chunk_size"] > 1:
+        failures.append(
+            f"accounted intermediate peak {chunked['accounted_bytes']}B "
+            f"exceeds budget {BUDGET}B by >20%")
+    rss_kb = chunked["peak_delta_kb"]
+    if rss_kb > 0 and rss_kb * 1024 > limit + RSS_SLACK_KB * 1024:
+        failures.append(
+            f"peak-RSS delta {rss_kb}kB exceeds budget {BUDGET}B "
+            f"(+20% +{RSS_SLACK_KB}kB slack)")
+
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    if not failures:
+        print("OK: chunked build is bit-identical and within the "
+              "memory budget")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
