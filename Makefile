@@ -52,3 +52,6 @@ smoke:
 		python examples/graph_pipeline.py
 	JAX_PLATFORMS=cpu PYTHONPATH=src $(SMOKE_W) timeout 300 \
 		python -m repro.launch.serve --arch nucleus --queries 64
+	JAX_PLATFORMS=cpu PYTHONPATH=src $(SMOKE_W) timeout 600 \
+		python -m repro.launch.serve --arch nucleus --warm-pool \
+		--pool-graphs 4 --queries 32

@@ -420,6 +420,56 @@ def build_lane(quick=False) -> list[str]:
     return rows
 
 
+def session_lane(quick=False) -> list[str]:
+    """Cold ``decompose()`` vs warm ``Session.decompose_many`` over one
+    shape bucket: a stream of similar-but-not-identical graphs (every
+    (n_r, n_s) distinct, so each cold call pays a fresh engine compile),
+    then the same stream through one ``Session`` (first call compiles the
+    bucket executable, the rest reuse it).  The derived column records the
+    per-graph split and the bucket stats — the number EXPERIMENTS.md's
+    "Session lane" quotes."""
+    import time
+
+    from repro.core import NucleusConfig, Session
+
+    rows = []
+    n_graphs = 4 if quick else 8
+    cfg = NucleusConfig(r=2, s=3, backend="dense", hierarchy="fused")
+    graphs = {}
+    from repro.graph import generators
+    for i in range(n_graphs):
+        g = generators.planted_cliques(230 + 7 * i, [12, 9, 7], 0.02,
+                                       seed=40 + i)
+        graphs[f"planted{230 + 7 * i}"] = g
+    problems = [build_problem(g, 2, 3) for g in graphs.values()]
+
+    cold_ts = []
+    for p in problems:
+        t0 = time.perf_counter()
+        decompose(p, cfg)
+        cold_ts.append(time.perf_counter() - t0)
+    sess = Session(cfg)
+    warm_ts = []
+    for p in problems:
+        t0 = time.perf_counter()
+        sess.decompose(p)
+        warm_ts.append(time.perf_counter() - t0)
+    t_cold, t_warm = sum(cold_ts), sum(warm_ts)
+    warm_steady = warm_ts[1:] or warm_ts
+    rows.append(row("session/cold_decompose_each", t_cold / n_graphs,
+                    f"graphs={n_graphs};total_s={t_cold:.2f}"))
+    rows.append(row("session/warm_decompose_each",
+                    sum(warm_steady) / len(warm_steady),
+                    f"first_call_s={warm_ts[0]:.2f};"
+                    f"buckets={len(sess.stats['buckets'])};"
+                    f"warm_hits={sess.stats['warm']}"))
+    rows.append(row(
+        "session/whole_stream", t_warm / n_graphs,
+        f"session_speedup_total={t_cold / max(t_warm, 1e-9):.1f}x;"
+        f"steady_state={(t_cold / n_graphs) / max(sum(warm_steady) / len(warm_steady), 1e-9):.1f}x"))
+    return rows
+
+
 ALL = {
     "fig6": fig6_variants,
     "fig7": fig7_grid,
@@ -431,4 +481,5 @@ ALL = {
     "hierarchy": hierarchy_lane,
     "facade": facade_lane,
     "build": build_lane,
+    "session": session_lane,
 }

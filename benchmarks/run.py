@@ -12,9 +12,12 @@ and the two-phase build; the `facade` lane records the decompose-once/
 query-many serving claim (`.cut(c)` sweep qps vs from-scratch connectivity,
 plus the serialized-artifact load cost); the `build` lane compares the
 memory-bounded chunked incidence builder against the eager one (peak
-memory + wall-clock vs chunk size, fresh subprocess per cell).  Compile
-time is excluded via a warmup call, so the rows measure steady-state
-wall-clock (what EXPERIMENTS.md records).
+memory + wall-clock vs chunk size, fresh subprocess per cell); the
+`session` lane records the warm-pool claim (cold per-shape `decompose()`
+compiles vs one shape-bucketed `Session` executable).  Compile time is
+excluded via a warmup call — except in the `session` lane, where compile
+time IS the measurand — so the rows measure steady-state wall-clock (what
+EXPERIMENTS.md records).
 """
 from __future__ import annotations
 

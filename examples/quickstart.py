@@ -19,14 +19,22 @@ def main() -> None:
     ap.add_argument("--r", type=int, default=2)
     ap.add_argument("--s", type=int, default=3)
     ap.add_argument("--n", type=int, default=300)
+    ap.add_argument("--backend", default="auto",
+                    help="a registered backend name, or 'auto' to let the "
+                         "planner pick (default)")
+    ap.add_argument("--hierarchy", default="auto")
     args = ap.parse_args()
 
     g = generators.planted_cliques(args.n, [16, 12, 9, 7], 0.02, seed=1)
     print(f"graph: n={g.n} m={g.m};  ({args.r},{args.s}) nucleus decomposition")
 
-    # ONE call: incidence structure + compiled peel + fused ANH-EL hierarchy
-    dec = decompose(g, NucleusConfig(r=args.r, s=args.s, backend="dense",
-                                     hierarchy="fused"))
+    # ONE call: incidence structure + peel + hierarchy; with backend="auto"
+    # the registry planner picks the backend/hierarchy from the device kind
+    # and problem size, and the decision rides on the artifact
+    dec = decompose(g, NucleusConfig(r=args.r, s=args.s,
+                                     backend=args.backend,
+                                     hierarchy=args.hierarchy))
+    print(dec.plan_report())
     print(f"r-cliques: {dec.n_r}, s-cliques: {dec.problem.n_s}")
 
     core = dec.core

@@ -1,6 +1,7 @@
 """The paper's contribution: parallel (r, s) nucleus decomposition + hierarchy.
 
-One front door (DESIGN.md §6):
+One front door (DESIGN.md §6; backend registry + planner + warm Session
+in §8):
 
   decompose(graph, config) -> Decomposition
       Runs the whole pipeline — incidence structure, exact/approx peeling on
@@ -29,6 +30,11 @@ Building blocks (stable, used by the facade and by tests/oracles):
   nucleus_vertex_sets / edge_density / canonicalize_labels / same_partition
   make_sharded_decomposition / pad_incidence — mesh-lowerable distributed
       pieces; brute_force_coreness — the definition-level oracle
+  Backend / BackendCapabilities / BackendResult / register_backend /
+      resolve_plan / Plan — the capability-declared backend registry +
+      the backend='auto' planner (repro.core.backends)
+  Session — warm decompose-many: shape-bucketed padded problems reuse one
+      compiled peel executable (repro.core.session)
 
 Legacy per-function entry points (exact_coreness, approx_coreness,
 dense_coreness, build_hierarchy_*, nh_*, cut_hierarchy,
@@ -65,8 +71,12 @@ from .nuclei import cut_hierarchy as _cut_hierarchy
 from .nuclei import nuclei_without_hierarchy as _nuclei_without_hierarchy
 from .distributed import make_sharded_decomposition, pad_incidence
 from .distributed import sharded_decomposition as _sharded_decomposition
+from .backends import (Backend, BackendCapabilities, BackendResult, Plan,
+                       resolve_plan)
+from .backends import register as register_backend
 from .api import (NucleusConfig, Decomposition, Nucleus, ConfigError,
-                  decompose)
+                  decompose, plan_config)
+from .session import Session
 
 # ---------------------------------------------------------------------------
 # Deprecated legacy surface: thin wrappers that warn once, then delegate.

@@ -34,25 +34,21 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from . import backends as backend_registry
+from .backends import (AUTO, BACKENDS, HIERARCHIES, METHODS, ConfigError,
+                       Plan)
 from .hierarchy import (HierarchyTree, build_hierarchy_basic,
                         build_hierarchy_levels)
 from .incidence import BUILDS, NucleusProblem, build_problem
 from .interleaved import (construct_tree_efficient, link_state_from_forest,
                           replay_trace)
-from .nh_baseline import nh_coreness
 from .nuclei import edge_density, nucleus_vertex_sets
-from .peel import PeelResult, approx_coreness, exact_coreness
-
-METHODS = ("exact", "approx")
-BACKENDS = ("dense", "gather", "sharded", "nh")
-HIERARCHIES = ("none", "fused", "replay", "two_phase", "basic")
+from .peel import PeelResult
 
 JSON_FORMAT = "repro.nucleus-decomposition"
-JSON_VERSION = 1
-
-
-class ConfigError(ValueError):
-    """An unsupported ``NucleusConfig`` combination (caught at validate())."""
+JSON_VERSION = 2
+# version 1 artifacts (pre-Plan) load fine: "plan" is simply absent.
+SUPPORTED_JSON_VERSIONS = (1, 2)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,12 +59,16 @@ class NucleusConfig:
       r, s        — the (r, s) of the decomposition, 1 <= r < s.
       method      — "exact" (ARB-NUCLEUS) or "approx" (Alg. 2, geometric
                     buckets); ``delta`` sets the approximation knob.
-      backend     — "dense" (compiled single-device engine), "gather"
-                    (eager work-efficient host loop), "sharded" (shard_map
-                    over ``mesh``), "nh" (sequential baseline/oracle).
+      backend     — a registered backend name ("dense": compiled
+                    single-device engine, "gather": eager work-efficient
+                    host loop, "sharded": shard_map over ``mesh``, "nh":
+                    sequential baseline/oracle) or "auto" (the registry
+                    planner picks from device kind, mesh availability,
+                    problem size and memory budget; DESIGN.md §8).
       hierarchy   — "none", "fused" (LINK fixpoint inside the compiled
                     peel), "replay" (host trace replay), "two_phase"
-                    (ANH-TE), "basic" (ANH-BL).
+                    (ANH-TE), "basic" (ANH-BL), or "auto" (richest
+                    strategy the resolved backend supports).
       use_pallas  — force the Pallas scatter-decrement on/off (None =
                     backend default; dense backend only).
       mesh        — jax Mesh for the sharded backend (None = whatever this
@@ -80,6 +80,12 @@ class NucleusConfig:
                     Both are bit-identical; chunked bounds peak memory.
       memory_budget_bytes — chunked-build intermediate-memory budget
                     (None = a 256 MiB default); sets the chunk size.
+                    With backend='auto' the planner additionally reads it
+                    as the machine's memory ceiling: if the dense engine's
+                    per-round working set would exceed it, the
+                    work-efficient gather backend is preferred (the
+                    resolved plan's reasons name the rule when it fires;
+                    DESIGN.md §8).
       build_chunk_size — explicit source vertices per chunk (overrides the
                     budget-derived size; pins the sparse chunked path).
     """
@@ -98,55 +104,37 @@ class NucleusConfig:
     build_chunk_size: Optional[int] = None
 
     def validate(self) -> "NucleusConfig":
-        """Reject unsupported combinations with actionable errors."""
+        """Reject unsupported combinations with actionable errors.
+
+        Backend x (method, hierarchy, knob) legality is DERIVED from the
+        registry's capability declarations
+        (``backends.check_capabilities``) — this method holds only the
+        backend-independent axis checks.  ``backend='auto'`` /
+        ``hierarchy='auto'`` are accepted here; the planner resolves them
+        at decompose() time and the resolved config re-validates.
+        """
         if not (1 <= self.r < self.s):
             raise ConfigError(
                 f"need 1 <= r < s, got (r, s) = ({self.r}, {self.s})")
         if self.method not in METHODS:
             raise ConfigError(
                 f"method={self.method!r}; expected one of {METHODS}")
-        if self.backend not in BACKENDS:
+        # membership is checked against the LIVE registry, so a backend
+        # registered at runtime is immediately legal (BACKENDS is the
+        # import-time snapshot kept for display/tests)
+        if self.backend != AUTO and \
+                self.backend not in backend_registry.names():
             raise ConfigError(
-                f"backend={self.backend!r}; expected one of {BACKENDS}")
-        if self.hierarchy not in HIERARCHIES:
+                f"backend={self.backend!r}; expected one of "
+                f"{backend_registry.names() + (AUTO,)}")
+        if self.hierarchy != AUTO and self.hierarchy not in HIERARCHIES:
             raise ConfigError(
-                f"hierarchy={self.hierarchy!r}; expected one of {HIERARCHIES}")
+                f"hierarchy={self.hierarchy!r}; expected one of "
+                f"{HIERARCHIES + (AUTO,)}")
         if self.method == "approx" and not self.delta > 0:
             raise ConfigError(
                 f"method='approx' needs delta > 0, got {self.delta}")
-        if self.hierarchy == "fused" and self.backend not in ("dense",
-                                                              "sharded"):
-            raise ConfigError(
-                f"hierarchy='fused' runs the LINK fixpoint inside the "
-                f"compiled peel loop, but backend={self.backend!r} has no "
-                f"compiled loop to fuse into; use hierarchy='replay' (same "
-                f"forest, host fixpoint) or backend='dense'")
-        if self.hierarchy == "replay" and self.backend not in ("dense",
-                                                               "gather"):
-            raise ConfigError(
-                f"hierarchy='replay' rebuilds the forest from the recorded "
-                f"peel trace, which backend={self.backend!r} does not "
-                f"return; use hierarchy='fused' (forest computed in the "
-                f"same loop) or 'two_phase'")
-        if self.backend == "nh" and self.method != "exact":
-            raise ConfigError(
-                "backend='nh' is the sequential exact baseline; it has no "
-                "approximate bucket schedule — use backend='dense' (or "
-                "'gather'/'sharded') for method='approx'")
-        if self.use_pallas and self.backend != "dense":
-            raise ConfigError(
-                f"use_pallas=True selects the Pallas scatter-decrement of "
-                f"the compiled dense engine; backend={self.backend!r} never "
-                f"runs it — use backend='dense' or drop use_pallas")
-        if self.compress and self.backend != "sharded":
-            raise ConfigError(
-                "compress=True (int16 + error-feedback delta all-reduce) "
-                "only applies to the sharded backend's collective; use "
-                "backend='sharded' or drop compress")
-        if self.mesh is not None and self.backend != "sharded":
-            raise ConfigError(
-                f"a mesh only applies to backend='sharded', got "
-                f"backend={self.backend!r}")
+        backend_registry.check_capabilities(self)
         if self.build not in BUILDS:
             raise ConfigError(
                 f"build={self.build!r}; expected one of {BUILDS}")
@@ -179,7 +167,7 @@ class NucleusConfig:
         """
         out = []
         for method in METHODS:
-            for backend in BACKENDS:
+            for backend in backend_registry.names():  # live registry
                 for hierarchy in HIERARCHIES:
                     cfg = cls(method=method, backend=backend,
                               hierarchy=hierarchy)
@@ -247,8 +235,10 @@ class Decomposition:
                  r_cliques: Optional[np.ndarray] = None,
                  edges: Optional[np.ndarray] = None,
                  n_vertices: Optional[int] = None,
-                 n_s: Optional[int] = None):
+                 n_s: Optional[int] = None,
+                 plan: Optional[Plan] = None):
         self.config = config
+        self._plan = plan
         self.problem = problem
         self._core = np.asarray(core)
         self._rounds = int(rounds)
@@ -314,6 +304,20 @@ class Decomposition:
     def uf_L(self) -> Optional[np.ndarray]:
         """(n_r,) nearest-lower-core table of the join forest."""
         return self._uf_L
+
+    # -- the planner's decision record -------------------------------------
+    @property
+    def plan(self) -> Optional[Plan]:
+        """How backend/hierarchy were resolved (requested vs resolved +
+        reasons).  None only on artifacts serialized before plans existed
+        (JSON version 1)."""
+        return self._plan
+
+    def plan_report(self) -> str:
+        """Human-readable resolution report (what quickstart prints)."""
+        if self._plan is None:
+            return "plan: not recorded (artifact predates plan embedding)"
+        return self._plan.report()
 
     # -- lazy hierarchy ----------------------------------------------------
     @property
@@ -447,6 +451,7 @@ class Decomposition:
             "peel_value": _ints(self._peel_value),
             "uf_parent": _opt_ints(self._uf_parent),
             "uf_L": _opt_ints(self._uf_L),
+            "plan": None if self._plan is None else self._plan.to_dict(),
             "tree": None if tree is None else {
                 "n_leaves": tree.n_leaves,
                 "parent": _ints(tree.parent),
@@ -478,12 +483,20 @@ class Decomposition:
         """
         d = json.loads(blob)
         if d.get("format") != JSON_FORMAT:
-            raise ValueError(f"not a serialized Decomposition: "
-                             f"format={d.get('format')!r}")
-        if d.get("version") != JSON_VERSION:
-            raise ValueError(f"unsupported Decomposition version "
-                             f"{d.get('version')!r} (want {JSON_VERSION})")
+            raise ValueError(
+                f"not a serialized Decomposition: format={d.get('format')!r}"
+                f" (expected {JSON_FORMAT!r}) — this file was not written "
+                f"by Decomposition.to_json(); regenerate the artifact with "
+                f"decompose(...).save(path)")
+        if d.get("version") not in SUPPORTED_JSON_VERSIONS:
+            raise ValueError(
+                f"unsupported Decomposition version {d.get('version')!r}: "
+                f"this build reads versions {SUPPORTED_JSON_VERSIONS} and "
+                f"writes {JSON_VERSION} — the artifact was written by a "
+                f"different repro version; regenerate it with to_json()/"
+                f"save() or upgrade the serving process")
         config = NucleusConfig.from_dict(d["config"])
+        plan_d = d.get("plan")
         arr = lambda x: None if x is None else np.asarray(x, np.int64)
         t = d.get("tree")
         tree = None if t is None else HierarchyTree(
@@ -505,7 +518,8 @@ class Decomposition:
                    edges=None if ed is None
                    else np.asarray(ed, np.int64).reshape(-1, 2),
                    n_vertices=d.get("n_vertices"),
-                   n_s=d.get("n_s"))
+                   n_s=d.get("n_s"),
+                   plan=None if plan_d is None else Plan.from_dict(plan_d))
 
     def save(self, path: str, include_inputs: bool = True) -> None:
         with open(path, "w") as f:
@@ -526,6 +540,44 @@ class Decomposition:
                 f"tree={'materialized' if self._tree is not None else 'lazy'})")
 
 
+def resolve_problem(graph_or_problem,
+                    config: NucleusConfig
+                    ) -> Tuple[NucleusProblem, NucleusConfig]:
+    """The front doors' shared input prologue: validate the config, build
+    the incidence structure from a ``Graph`` (threading every build knob),
+    or adopt a prebuilt ``NucleusProblem`` (its (r, s) wins).  Shared by
+    ``decompose()`` and ``Session`` so the build stage cannot drift."""
+    if isinstance(graph_or_problem, NucleusProblem):
+        problem = graph_or_problem
+        if (problem.r, problem.s) != (config.r, config.s):
+            config = dataclasses.replace(config, r=problem.r, s=problem.s)
+        config.validate()
+    else:
+        config.validate()
+        problem = build_problem(
+            graph_or_problem, config.r, config.s, build=config.build,
+            memory_budget_bytes=config.memory_budget_bytes,
+            chunk_size=config.build_chunk_size)
+    return problem, config
+
+
+def plan_config(problem: NucleusProblem,
+                config: NucleusConfig) -> Tuple[NucleusConfig, Plan]:
+    """Resolve ``backend='auto'``/``hierarchy='auto'`` against ``problem``.
+
+    Returns the concrete, re-validated config plus the ``Plan`` decision
+    record (explicit configs get a trivial plan).  Shared by
+    ``decompose()`` and ``Session`` so the two front doors cannot drift.
+    """
+    plan = backend_registry.resolve_plan(
+        config, n_r=problem.n_r, n_s=problem.n_s, n_sub=problem.n_sub)
+    if (plan.backend, plan.hierarchy) != (config.backend, config.hierarchy):
+        config = dataclasses.replace(config, backend=plan.backend,
+                                     hierarchy=plan.hierarchy)
+    config.validate()
+    return config, plan
+
+
 def decompose(graph_or_problem, config: Optional[NucleusConfig] = None,
               **overrides) -> Decomposition:
     """THE entry point: run an (r, s) nucleus decomposition per ``config``.
@@ -534,65 +586,35 @@ def decompose(graph_or_problem, config: Optional[NucleusConfig] = None,
     here from ``config.r/s``) or a prebuilt ``NucleusProblem`` (its (r, s)
     wins).  ``config`` defaults to ``NucleusConfig()``; keyword overrides
     are applied on top, e.g. ``decompose(g, method="approx", delta=0.5)``.
+    ``backend='auto'``/``hierarchy='auto'`` are resolved here by the
+    registry planner (``backends.resolve_plan``); the decision is recorded
+    on the result (``.plan`` / ``plan_report()``) and serialized with it.
 
     The peel runs now (fused hierarchy included — one jitted call on the
-    dense backend); tree materialization and cut/nuclei queries are lazy on
-    the returned ``Decomposition``.
+    dense backend) on the registered backend the config names; tree
+    materialization and cut/nuclei queries are lazy on the returned
+    ``Decomposition``.
     """
     if config is None:
         config = NucleusConfig()
     if overrides:
         config = dataclasses.replace(config, **overrides)
-    if isinstance(graph_or_problem, NucleusProblem):
-        problem = graph_or_problem
-        if (problem.r, problem.s) != (config.r, config.s):
-            config = dataclasses.replace(config, r=problem.r, s=problem.s)
-    else:
-        config.validate()
-        problem = build_problem(
-            graph_or_problem, config.r, config.s, build=config.build,
-            memory_budget_bytes=config.memory_budget_bytes,
-            chunk_size=config.build_chunk_size)
-    config.validate()
+    problem, config = resolve_problem(graph_or_problem, config)
+    config, plan = plan_config(problem, config)
+    return execute_plan(problem, config, plan)
 
-    fused = config.hierarchy == "fused"
-    order_round = None
-    uf_parent = uf_L = None
-    peel_value = None
-    if config.backend in ("dense", "gather"):
-        peel = exact_coreness if config.method == "exact" else \
-            lambda p, **kw: approx_coreness(p, delta=config.delta, **kw)
-        kw: Dict[str, Any] = {"backend": config.backend}
-        if config.backend == "dense":
-            kw["use_pallas"] = config.use_pallas
-        res: PeelResult = peel(problem, hierarchy=fused, **kw)
-        core, rounds = np.asarray(res.core), int(res.rounds)
-        order_round = np.asarray(res.order_round)
-        peel_value = np.asarray(res.peel_value)
-        if fused:
-            uf_parent = np.asarray(res.uf_parent)
-            uf_L = np.asarray(res.uf_L)
-    elif config.backend == "sharded":
-        from .distributed import sharded_decomposition
-        mesh = config.mesh
-        if mesh is None:
-            from ..launch.mesh import make_host_mesh
-            mesh = make_host_mesh()
-        out = sharded_decomposition(problem, mesh, kind=config.method,
-                                    delta=config.delta,
-                                    compress=config.compress,
-                                    hierarchy=fused)
-        if fused:
-            core_j, rounds, parent, L, raw = out
-            core = np.asarray(core_j)
-            uf_parent, uf_L = np.asarray(parent), np.asarray(L)
-            peel_value = np.asarray(raw)
-        else:
-            core, rounds = np.asarray(out[0]), int(out[1])
-    else:  # nh — the sequential baseline as a backend
-        core_np, rho = nh_coreness(problem)
-        core, rounds = np.asarray(core_np), int(rho)
 
-    return Decomposition(config, problem=problem, core=core, rounds=rounds,
-                         order_round=order_round, peel_value=peel_value,
-                         uf_parent=uf_parent, uf_L=uf_L)
+def execute_plan(problem: NucleusProblem, config: NucleusConfig,
+                 plan: Plan) -> Decomposition:
+    """Run an already-planned decomposition: registry lookup + dispatch.
+
+    ``config`` must be concrete (post-``plan_config``); ``plan`` is the
+    decision record to attach.  ``Session`` calls this directly on its
+    fallback path so the planner's provenance (requested='auto' + reasons)
+    survives instead of being re-derived from the resolved config.
+    """
+    res = backend_registry.get(config.backend).run(problem, config)
+    return Decomposition(config, problem=problem, core=res.core,
+                         rounds=res.rounds, order_round=res.order_round,
+                         peel_value=res.peel_value, uf_parent=res.uf_parent,
+                         uf_L=res.uf_L, plan=plan)

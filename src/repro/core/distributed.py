@@ -16,6 +16,7 @@ span result translated to "number of all-reduces".
 """
 from __future__ import annotations
 
+import functools
 from math import comb
 from typing import Optional
 
@@ -152,6 +153,24 @@ def make_sharded_decomposition(mesh: Mesh, n_r: int, n_s_padded: int, C: int,
     return fn, in_sh, out_sh
 
 
+@functools.lru_cache(maxsize=64)
+def _jitted_decomposition(mesh: Mesh, n_r: int, n_s_padded: int, C: int,
+                          schedule: PeelSchedule,
+                          max_rounds: Optional[int], compress: bool,
+                          hierarchy: bool):
+    """Warm pool for the sharded fn: ``jax.jit`` caches executables per
+    *callable object*, and ``make_sharded_decomposition`` used to return a
+    fresh closure on every call — so every sharded run recompiled even for
+    identical shapes.  Memoizing the jitted callable on the hashable key
+    (Mesh compares by value) makes repeated same-shape sharded runs reuse
+    the compiled executable — the warm-pool behaviour ``core.session``
+    relies on."""
+    fn, _, _ = make_sharded_decomposition(mesh, n_r, n_s_padded, C, schedule,
+                                          max_rounds, compress=compress,
+                                          hierarchy=hierarchy)
+    return jax.jit(fn)
+
+
 def sharded_decomposition(problem: NucleusProblem, mesh: Mesh,
                           kind: str = "exact", delta: float = 0.1,
                           max_rounds: Optional[int] = None,
@@ -168,11 +187,9 @@ def sharded_decomposition(problem: NucleusProblem, mesh: Mesh,
     inc, n_s_pad = pad_incidence(problem.inc_rid, n_dev)
     schedule = PeelSchedule(kind=kind, s_choose_r=comb(problem.s, problem.r),
                             delta=delta, n=problem.g.n)
-    fn, _, _ = make_sharded_decomposition(mesh, problem.n_r, n_s_pad,
-                                          problem.n_sub, schedule, max_rounds,
-                                          compress=compress,
-                                          hierarchy=hierarchy)
-    out = jax.jit(fn)(inc, problem.deg0)
+    fn = _jitted_decomposition(mesh, problem.n_r, n_s_pad, problem.n_sub,
+                               schedule, max_rounds, compress, hierarchy)
+    out = fn(inc, problem.deg0)
     core, rounds = out[0], out[1]
     raw = core
     if kind == "approx":  # practical tightening (paper §6)

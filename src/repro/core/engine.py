@@ -61,6 +61,16 @@ def make_schedule(problem: NucleusProblem, kind: str,
                         delta=delta, n=problem.g.n)
 
 
+def pallas_by_default() -> bool:
+    """THE default-scatter policy: Pallas on TPU, XLA scatter-add
+    elsewhere (interpret-mode Pallas is a correctness oracle, not a fast
+    path).  ``dense_coreness(use_pallas=None)`` resolves through this, and
+    ``core.session`` consults the same predicate to decide when a config
+    *defaults* onto the per-problem Pallas plan (and must take the cold
+    path) — one place to change if the policy ever widens."""
+    return jax.default_backend() == "tpu"
+
+
 @dataclasses.dataclass(frozen=True)
 class ScatterSpec:
     """Static (hashable) config of the Pallas scatter-decrement path."""
@@ -264,7 +274,8 @@ def run_peel_engine(inc_rid, deg0, schedule: PeelSchedule, *,
                     resid0=None, alive0=None,
                     scatter: Optional[Callable] = None,
                     hierarchy: bool = False, link0=None,
-                    gather_links: Optional[Callable] = None):
+                    gather_links: Optional[Callable] = None,
+                    peeled0=None):
     """Drive ``peel_round`` to a fixpoint under one ``lax.while_loop``.
 
     Returns (core, order_round, rounds): raw bucket values per r-clique, the
@@ -279,6 +290,12 @@ def run_peel_engine(inc_rid, deg0, schedule: PeelSchedule, *,
     backend passes device-varying-marked arrays); gather_links(la, lb,
     lvalid) all-gathers each round's locally generated links so the
     replicated link state sees the global multiset.
+
+    peeled0 marks r-cliques as already peeled before round 0 — the ghost
+    entries of a shape-bucketed padded problem (``core.session``).  They
+    never enter a peel bucket, never drag the schedule minimum (live
+    degree is masked to BIG), emit no links and keep core/order at -1, so
+    the real prefix of every output is bit-identical to the unpadded run.
     """
     n_r = deg0.shape[0]
     core0 = jnp.full((n_r,), -1, INT)
@@ -288,7 +305,7 @@ def run_peel_engine(inc_rid, deg0, schedule: PeelSchedule, *,
             empty = jnp.zeros((0,), INT)
             return core0, order0, jnp.zeros((), INT), empty, empty
         return core0, order0, jnp.zeros((), INT)
-    peeled0 = jnp.zeros((n_r,), bool)
+    peeled0 = jnp.zeros((n_r,), bool) if peeled0 is None else peeled0
     if alive0 is None:
         alive0 = jnp.ones((inc_rid.shape[0],), bool)
     if resid0 is None:
@@ -345,7 +362,7 @@ def run_peel_engine(inc_rid, deg0, schedule: PeelSchedule, *,
 
 @partial(jax.jit, static_argnames=("schedule", "max_rounds", "spec",
                                    "hierarchy"))
-def _dense_engine(inc_rid, deg0, plan_rids, plan_sids, *,
+def _dense_engine(inc_rid, deg0, plan_rids, plan_sids, peeled0, *,
                   schedule: PeelSchedule, max_rounds: int,
                   spec: Optional[ScatterSpec], hierarchy: bool = False):
     n_r = deg0.shape[0]
@@ -360,7 +377,8 @@ def _dense_engine(inc_rid, deg0, plan_rids, plan_sids, *,
                                      interpret=spec.interpret)
             return out[:n_r, 0]
     return run_peel_engine(inc_rid, deg0, schedule, max_rounds=max_rounds,
-                           scatter=scatter, hierarchy=hierarchy)
+                           scatter=scatter, hierarchy=hierarchy,
+                           peeled0=peeled0)
 
 
 def _scatter_plan(problem: NucleusProblem, block_n: int, chunk_e: int,
@@ -399,7 +417,8 @@ def dense_coreness(problem: NucleusProblem, schedule: PeelSchedule, *,
                    block_n: int = DEFAULT_BLOCK_N,
                    chunk_e: int = DEFAULT_CHUNK_E,
                    interpret: Optional[bool] = None,
-                   hierarchy: bool = False):
+                   hierarchy: bool = False,
+                   peeled0=None):
     """One jitted call: (core_raw, order_round, rounds) for the whole peel.
 
     use_pallas=None picks the Pallas scatter on TPU and the XLA scatter-add
@@ -409,9 +428,13 @@ def dense_coreness(problem: NucleusProblem, schedule: PeelSchedule, *,
 
     hierarchy=True fuses the ANH-EL link fixpoint into the same compiled
     call and appends the join forest (parent, L) to the return tuple.
+
+    peeled0 pre-peels ghost r-cliques of a shape-bucketed padded problem
+    (``core.session``); it is always materialized to an array before the
+    jit call so the executable cache keys only on shapes + statics.
     """
     if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
+        use_pallas = pallas_by_default()
     if max_rounds is None:
         max_rounds = problem.n_r + 2
     dummy = jnp.zeros((0,), INT)
@@ -421,6 +444,8 @@ def dense_coreness(problem: NucleusProblem, schedule: PeelSchedule, *,
         rids, sids, spec = _scatter_plan(problem, block_n, chunk_e, interpret)
     else:
         rids, sids, spec = dummy, dummy, None
-    return _dense_engine(problem.inc_rid, problem.deg0, rids, sids,
+    if peeled0 is None:
+        peeled0 = jnp.zeros((problem.deg0.shape[0],), bool)
+    return _dense_engine(problem.inc_rid, problem.deg0, rids, sids, peeled0,
                          schedule=schedule, max_rounds=max_rounds, spec=spec,
                          hierarchy=hierarchy)

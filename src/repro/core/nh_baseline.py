@@ -9,6 +9,11 @@ Two roles:
 
 Everything here is numpy/python on purpose — no JAX — so that agreement
 between this module and the vectorized implementations is meaningful.
+
+``nh_coreness`` also backs the registered ``nh`` backend
+(``repro.core.backends``), whose capability declaration — exact-only, no
+peel trace, no compiled loop — is what makes ``decompose(backend='nh')``
+reject approx/fused/replay configs with derived errors.
 """
 from __future__ import annotations
 

@@ -15,7 +15,12 @@ round body (``repro.core.engine.peel_round``):
 
 Both backends record the peel trace (``order_round`` + raw peel values),
 which ``interleaved.replay_trace`` consumes to build the ANH-EL hierarchy
-without any in-loop callback.
+without any in-loop callback.  These two entry points back the registered
+``dense`` and ``gather`` backends (``repro.core.backends``): the registry
+entry declares the capabilities (gather has no compiled loop, so no fused
+hierarchy; both record the trace) and ``decompose()`` dispatches through
+it — the capability declarations there, not this module, are what
+``NucleusConfig.validate()`` derives legality from.
 """
 from __future__ import annotations
 

@@ -1,0 +1,234 @@
+"""Warm ``Session``: decompose many graphs without recompiling per shape.
+
+``decompose()`` is one-shot: every new problem shape keys a fresh XLA
+compile of the dense engine (shapes + the static ``PeelSchedule`` make up
+the executable cache key), so a serving process that decomposes a stream
+of similar graphs pays the dominant cost — compilation — over and over.
+``Session`` is the warm-pool front door:
+
+  * **Shape buckets.**  Each problem is padded to a shape class
+    (``n_r``/``n_s`` rounded up to the next power of two, floor
+    ``bucket_floor``): ghost s-clique rows carry ``-1`` member ids (the
+    engine's distributed padding convention — they die in round 0 and
+    contribute no decrements, no links) and ghost r-cliques enter
+    pre-peeled (``peeled0``), so they never join a bucket, never drag the
+    schedule minimum, and keep core/order at -1.  The real prefix of every
+    output is bit-identical to the unpadded run (tests pin this
+    array-for-array against ``decompose()``).
+  * **Schedule canonicalization.**  The static ``PeelSchedule`` carries
+    the vertex count ``n``, which differs per graph and would defeat the
+    bucket.  Exact schedules never read ``n`` (pinned to 1); approximate
+    schedules read it only through ``cap()``, so ``n`` is replaced by the
+    smallest vertex count with the same cap — same compiled behaviour,
+    same results, one executable per (delta, C, cap) class.
+  * **Warm executables.**  With shapes and statics canonicalized,
+    same-bucket problems hit the engine's jitted-callable cache instead of
+    recompiling; ``Session.stats`` records the bucket hit pattern, and the
+    ``session`` bench lane + EXPERIMENTS.md record the cold/warm speedup.
+
+Configs that resolve to a non-dense backend — or that pin or (on TPU)
+default to the Pallas scatter, whose CSR plan is per-problem — fall back
+to the planned cold path (same ``Plan`` provenance, counted in
+``stats["fallback"]``): correct, just not bucket-warmed; the sharded
+backend has its own same-shape warm cache
+(``distributed._jitted_decomposition``).
+``launch.serve --arch nucleus --warm-pool`` drives this end-to-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph import INT
+from .api import (Decomposition, NucleusConfig, execute_plan, plan_config,
+                  resolve_problem)
+from .engine import dense_coreness, pallas_by_default
+from .incidence import NucleusProblem
+from .schedule import PeelSchedule
+
+DEFAULT_BUCKET_FLOOR = 64
+
+
+def bucket_size(n: int, floor: int = DEFAULT_BUCKET_FLOOR) -> int:
+    """Next power of two >= max(n, floor): the shape-class boundary.
+
+    Power-of-two classes bound the padding overhead at 2x work per axis
+    while collapsing the long tail of near-miss shapes onto one compiled
+    executable."""
+    n = max(int(n), int(floor), 1)
+    return 1 << (n - 1).bit_length()
+
+
+def canonical_schedule(method: str, s_choose_r: int, delta: float,
+                       n: int) -> PeelSchedule:
+    """The behaviour-preserving schedule representative of (method, C,
+    delta, n)'s equivalence class.
+
+    Exact schedules never read ``n`` or ``delta``; approximate schedules
+    read ``n`` only through ``cap()`` (the per-bucket round cap), so the
+    smallest ``n`` with the same cap is substituted (binary search — cap
+    is nondecreasing in n).  Results are bit-identical to the
+    uncanonicalized schedule; the static jit key stops varying per graph.
+    """
+    if method == "exact":
+        return PeelSchedule(kind="exact", s_choose_r=s_choose_r)
+    mk = lambda nn: PeelSchedule(kind="approx", s_choose_r=s_choose_r,
+                                 delta=delta, n=nn)
+    target = mk(n).cap()
+    lo, hi = 2, max(int(n), 2)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if mk(mid).cap() >= target:
+            hi = mid
+        else:
+            lo = mid + 1
+    return mk(lo)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Bucket:
+    """One shape class: the statics + padded shapes a compiled executable
+    keys on.  ``astuple`` is the hashable stats key."""
+
+    method: str
+    r: int
+    s: int
+    fused: bool
+    n_r_pad: int
+    n_s_pad: int
+    schedule: PeelSchedule
+
+    def astuple(self) -> Tuple:
+        return (self.method, self.r, self.s, self.fused, self.n_r_pad,
+                self.n_s_pad, self.schedule)
+
+
+@dataclasses.dataclass(frozen=True)
+class _PaddedProblem:
+    """The minimal view ``dense_coreness`` reads off a problem (the mem-CSR
+    and r-clique table stay on the real problem — queries never see the
+    padding)."""
+
+    inc_rid: jnp.ndarray
+    deg0: jnp.ndarray
+    n_r: int
+    n_s: int
+
+
+class Session:
+    """Warm decompose-many: ``Session(config).decompose(graph)``.
+
+    The config is fixed at construction (keyword overrides apply on top,
+    like ``decompose``); every ``decompose``/``decompose_many`` call runs
+    the same pipeline as the module-level ``decompose()`` — same planner,
+    same validation, same ``Decomposition`` artifact — but routes dense
+    peels through the shape-bucketed padded engine so same-bucket problems
+    reuse one compiled executable.  ``stats`` tallies warm vs cold engine
+    calls and the per-bucket hit counts.
+    """
+
+    def __init__(self, config: Optional[NucleusConfig] = None, *,
+                 bucket_floor: int = DEFAULT_BUCKET_FLOOR, **overrides):
+        if config is None:
+            config = NucleusConfig()
+        if overrides:
+            config = dataclasses.replace(config, **overrides)
+        config.validate()
+        self.config = config
+        self.bucket_floor = int(bucket_floor)
+        self.stats: Dict[str, Any] = {
+            "decompositions": 0,   # total artifacts produced
+            "warm": 0,             # padded engine calls that hit a bucket
+            "cold": 0,             # padded engine calls compiling a bucket
+            "fallback": 0,         # routed to plain decompose()
+            "buckets": {},         # bucket key -> call count
+        }
+
+    # -- front door --------------------------------------------------------
+    def decompose(self, graph_or_problem) -> Decomposition:
+        """Same contract (and bit-identical arrays) as
+        ``api.decompose(graph_or_problem, self.config)``."""
+        problem, config = resolve_problem(graph_or_problem, self.config)
+        config, plan = plan_config(problem, config)
+        self.stats["decompositions"] += 1
+        # the padded path covers the compiled dense engine's XLA scatter;
+        # the Pallas scatter plan is per-problem (CSR edge arrays), so any
+        # config that pins it — or defaults to it on TPU — takes the cold
+        # path (results identical either way, and the fallback is counted)
+        wants_pallas = config.use_pallas or (
+            config.use_pallas is None and pallas_by_default())
+        if config.backend != "dense" or wants_pallas or problem.n_r == 0:
+            self.stats["fallback"] += 1
+            return execute_plan(problem, config, plan)
+        return self._decompose_padded(problem, config, plan)
+
+    def decompose_many(self, graphs) -> List[Decomposition]:
+        """Decompose a stream; same-bucket members after the first are
+        warm.  Order of results matches the input order."""
+        return [self.decompose(g) for g in graphs]
+
+    # -- the padded dense path ---------------------------------------------
+    def _bucket(self, problem: NucleusProblem,
+                config: NucleusConfig) -> "_Bucket":
+        """The shape class ``problem`` lands in under ``config``: the
+        canonical schedule plus padded shapes (everything the compiled
+        executable depends on), computed once and named."""
+        return _Bucket(
+            method=config.method, r=config.r, s=config.s,
+            fused=config.hierarchy == "fused",
+            n_r_pad=bucket_size(problem.n_r, self.bucket_floor),
+            n_s_pad=bucket_size(problem.n_s, self.bucket_floor),
+            schedule=canonical_schedule(config.method, problem.n_sub,
+                                        config.delta, problem.g.n))
+
+    def bucket_key(self, problem: NucleusProblem,
+                   config: Optional[NucleusConfig] = None) -> Tuple:
+        """The hashable shape-class key (``stats['buckets']`` is indexed
+        by it)."""
+        return tuple(self._bucket(problem, config or self.config).astuple())
+
+    def _decompose_padded(self, problem: NucleusProblem,
+                          config: NucleusConfig, plan) -> Decomposition:
+        fused = config.hierarchy == "fused"
+        n_r, n_s, C = problem.n_r, problem.n_s, problem.n_sub
+        bucket = self._bucket(problem, config)
+        key = tuple(bucket.astuple())
+        sched = bucket.schedule
+        n_r_pad, n_s_pad = bucket.n_r_pad, bucket.n_s_pad
+        seen = self.stats["buckets"].get(key, 0)
+        self.stats["buckets"][key] = seen + 1
+        self.stats["warm" if seen else "cold"] += 1
+
+        inc = jnp.concatenate(
+            [problem.inc_rid, jnp.full((n_s_pad - n_s, C), -1, INT)], axis=0)
+        deg0 = jnp.concatenate(
+            [problem.deg0, jnp.zeros((n_r_pad - n_r,), INT)])
+        peeled0 = jnp.concatenate(
+            [jnp.zeros((n_r,), bool), jnp.ones((n_r_pad - n_r,), bool)])
+        padded = _PaddedProblem(inc_rid=inc, deg0=deg0, n_r=n_r_pad,
+                                n_s=n_s_pad)
+        out = dense_coreness(padded, sched, use_pallas=False,
+                             max_rounds=n_r_pad + 2, hierarchy=fused,
+                             peeled0=peeled0)
+        core_raw = np.asarray(out[0])[:n_r]
+        order_round = np.asarray(out[1])[:n_r]
+        rounds = int(out[2])
+        uf_parent = uf_L = None
+        if fused:
+            uf_parent = np.asarray(out[3])[:n_r]
+            uf_L = np.asarray(out[4])[:n_r]
+        if config.method == "approx":
+            # same practical tightening as peel.approx_coreness: the
+            # estimate never exceeds the original s-clique-degree, while
+            # peel_value keeps the raw bucket values LINK equality saw
+            core = np.minimum(core_raw, np.asarray(problem.deg0))
+            peel_value = core_raw
+        else:
+            core, peel_value = core_raw, core_raw
+        return Decomposition(config, problem=problem, core=core,
+                             rounds=rounds, order_round=order_round,
+                             peel_value=peel_value, uf_parent=uf_parent,
+                             uf_L=uf_L, plan=plan)

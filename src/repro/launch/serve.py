@@ -11,7 +11,9 @@ serialized ``Decomposition`` (``--decomposition path.json``, e.g. computed
 offline by the sharded backend; without a path a small graph is decomposed,
 serialized, and reloaded to prove the loop) and answers batched
 ``cut``/``nuclei`` queries with latency stats — the heavy-traffic story of
-Fig. 10 end-to-end.
+Fig. 10 end-to-end.  ``--warm-pool`` instead drives a stream of graphs
+through one ``repro.core.Session`` so same-bucket graphs reuse the compiled
+peel executable (the offline stage at traffic, not just the query stage).
 """
 from __future__ import annotations
 
@@ -109,6 +111,75 @@ def serve_din(n_batches: int = 8, batch: int = 512, smoke: bool = True,
     return np.concatenate(scores)
 
 
+def serve_nucleus_warm_pool(n_graphs: int = 5, n_queries: int = 32,
+                            seed: int = 0, quiet: bool = False):
+    """Warm-pool serving: one ``Session``, a stream of same-bucket graphs.
+
+    The heavy-traffic shape of the decompose-once/query-many story: many
+    tenants submit similar-sized graphs, the offline stage runs them
+    through a shared ``Session`` so every graph after the first reuses the
+    bucket's compiled peel executable, and each resulting artifact then
+    answers cut/nuclei queries.  Prints per-graph decompose latency (the
+    cold-vs-warm split), the session's bucket stats, and aggregate query
+    latency.  Returns a stats dict.
+    """
+    from ..core import NucleusConfig, Session
+    from ..graph import generators
+
+    from ..core.incidence import build_problem
+
+    if n_graphs < 1:
+        raise SystemExit("--pool-graphs must be >= 1")
+    sess = Session(NucleusConfig(r=2, s=3, backend="dense",
+                                 hierarchy="fused"))
+    rng = np.random.default_rng(seed)
+    dec_s: List[float] = []
+    lat_us: List[float] = []
+    queries = 0
+    # the incidence structures are built up front (the build stage has its
+    # own lane/chunked story, DESIGN.md §7); the timer below isolates what
+    # the Session warms — the compiled peel + hierarchy
+    problems = []
+    for gi in range(n_graphs):
+        # sizes drift but stay inside one power-of-two shape class, so the
+        # pool demonstrates the warm path rather than bucket churn
+        g = generators.planted_cliques(118 + 2 * gi, [10, 8, 6], 0.03,
+                                       seed=seed + gi)
+        problems.append(build_problem(g, 2, 3))
+    for problem in problems:
+        t0 = time.perf_counter()
+        dec = sess.decompose(problem)
+        dec_s.append(time.perf_counter() - t0)
+        kmax = int(dec.core.max()) if dec.n_r else 0
+        for c in rng.integers(1, max(kmax, 1) + 1, size=n_queries):
+            t0 = time.perf_counter()
+            dec.nuclei(int(c)) if queries % 2 else dec.cut(int(c))
+            lat_us.append((time.perf_counter() - t0) * 1e6)
+            queries += 1
+    lat = np.asarray(lat_us) if lat_us else np.zeros((1,))
+    # None (JSON-safe), not NaN, when a 1-graph pool has no warm calls
+    warm = float(np.median(dec_s[1:])) if dec_s[1:] else None
+    stats = {"graphs": n_graphs, "queries": queries,
+             "decompose_cold_s": dec_s[0],
+             "decompose_warm_s": warm,
+             "p50_us": float(np.percentile(lat, 50)),
+             "p95_us": float(np.percentile(lat, 95)),
+             "session": {k: v for k, v in sess.stats.items()
+                         if k != "buckets"},
+             "n_buckets": len(sess.stats["buckets"])}
+    if not quiet:
+        warm_txt = "no warm calls (pool of 1)" if warm is None else (
+            f"warm median {warm * 1e3:.0f}ms "
+            f"({dec_s[0] / max(warm, 1e-9):.1f}x)")
+        print(f"warm pool: {n_graphs} graphs through 1 Session "
+              f"({stats['n_buckets']} shape bucket(s), "
+              f"{stats['session']['warm']} warm hits): "
+              f"cold {dec_s[0] * 1e3:.0f}ms, {warm_txt}; "
+              f"{queries} queries p50={stats['p50_us']:.0f}us "
+              f"p95={stats['p95_us']:.0f}us")
+    return stats
+
+
 def serve_nucleus(path: str = "", n_queries: int = 64, batch: int = 8,
                   seed: int = 0, quiet: bool = False):
     """Nucleus-query serving: decompose once (offline), query many (here).
@@ -175,9 +246,20 @@ def main() -> None:
                          "(--arch nucleus); omitted = inline offline stage")
     ap.add_argument("--queries", type=int, default=64,
                     help="number of nucleus queries (--arch nucleus)")
+    ap.add_argument("--warm-pool", action="store_true",
+                    help="--arch nucleus: decompose a stream of graphs "
+                         "through one warm Session (shape-bucketed compile "
+                         "cache) instead of serving a single artifact")
+    ap.add_argument("--pool-graphs", type=int, default=5,
+                    help="graphs in the warm pool (--warm-pool)")
     args = ap.parse_args()
     if args.arch == "nucleus":
-        serve_nucleus(path=args.decomposition, n_queries=args.queries)
+        if args.warm_pool:
+            serve_nucleus_warm_pool(n_graphs=args.pool_graphs,
+                                    n_queries=max(args.queries // max(
+                                        args.pool_graphs, 1), 1))
+        else:
+            serve_nucleus(path=args.decomposition, n_queries=args.queries)
     elif args.arch == "din":
         serve_din(n_batches=4)
     else:

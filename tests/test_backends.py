@@ -1,0 +1,326 @@
+"""Registry conformance (DESIGN.md §8).
+
+Four contracts:
+  * REGISTRY — the four in-tree backends are registered in the canonical
+    order, their capability declarations reproduce the DESIGN.md §6
+    legality matrix exactly (29 triples, same order — pinned literally),
+    and ``validate()``'s derived errors name the offending backend.
+  * CONFORMANCE — every registered backend's declared capabilities are
+    exercised: each legal triple runs on a tiny graph and produces exactly
+    the artifacts the capabilities promise (trace iff ``records_trace``,
+    forest iff fused), with ``rounds`` always a python int; each illegal
+    knob raises ``ConfigError`` naming the backend.
+  * PLANNER — ``resolve_plan``'s decision rules, unit-tested on explicit
+    device/problem facts.
+  * AUTO PARITY — ``backend='auto'``/``hierarchy='auto'`` produce
+    array-for-array the same decomposition as the explicitly-configured
+    equivalent on every golden fixture, and the plan round-trips through
+    JSON.
+"""
+import itertools
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import backends as B
+from repro.core import (ConfigError, Decomposition, NucleusConfig,
+                        build_problem, decompose)
+from repro.core.api import BACKENDS, HIERARCHIES, METHODS
+from repro.graph.generators import golden_suite
+
+pytestmark = pytest.mark.fast
+
+# The DESIGN.md §6 matrix, pinned literally: legal_combinations() must emit
+# exactly these triples in exactly this order (the byte-identity oracle the
+# capability derivation is checked against).
+EXPECTED_LEGAL = [
+    ("exact", "dense", "none"), ("exact", "dense", "fused"),
+    ("exact", "dense", "replay"), ("exact", "dense", "two_phase"),
+    ("exact", "dense", "basic"),
+    ("exact", "gather", "none"), ("exact", "gather", "replay"),
+    ("exact", "gather", "two_phase"), ("exact", "gather", "basic"),
+    ("exact", "sharded", "none"), ("exact", "sharded", "fused"),
+    ("exact", "sharded", "two_phase"), ("exact", "sharded", "basic"),
+    ("exact", "nh", "none"), ("exact", "nh", "two_phase"),
+    ("exact", "nh", "basic"),
+    ("approx", "dense", "none"), ("approx", "dense", "fused"),
+    ("approx", "dense", "replay"), ("approx", "dense", "two_phase"),
+    ("approx", "dense", "basic"),
+    ("approx", "gather", "none"), ("approx", "gather", "replay"),
+    ("approx", "gather", "two_phase"), ("approx", "gather", "basic"),
+    ("approx", "sharded", "none"), ("approx", "sharded", "fused"),
+    ("approx", "sharded", "two_phase"), ("approx", "sharded", "basic"),
+]
+
+
+@pytest.fixture(scope="module")
+def problem():
+    return build_problem(golden_suite()["two_triangles"](), 2, 3)
+
+
+# ---------------------------------------------------------------------------
+# Registry + derived legality
+# ---------------------------------------------------------------------------
+
+def test_registry_order_is_canonical():
+    assert B.names() == ("dense", "gather", "sharded", "nh")
+    assert BACKENDS == B.names()
+    for b in B.all_backends():
+        assert isinstance(b, B.Backend)
+
+
+def test_legal_combinations_byte_identical():
+    """The derived matrix == the pre-registry hand-coded matrix, same
+    triples, same order."""
+    assert NucleusConfig.legal_combinations() == EXPECTED_LEGAL
+
+
+def test_capability_matrix_matches_design_table():
+    want = {
+        "dense": ("none", "fused", "replay", "two_phase", "basic"),
+        "gather": ("none", "replay", "two_phase", "basic"),
+        "sharded": ("none", "fused", "two_phase", "basic"),
+        "nh": ("none", "two_phase", "basic"),
+    }
+    for name, hierarchies in want.items():
+        assert B.get(name).capabilities.hierarchies == hierarchies
+    assert B.get("nh").capabilities.methods == ("exact",)
+
+
+def test_unknown_backend_lists_registered_and_auto():
+    with pytest.raises(ConfigError, match="auto"):
+        NucleusConfig(backend="cuda").validate()
+    with pytest.raises(ConfigError, match="auto"):
+        NucleusConfig(hierarchy="bogus").validate()
+
+
+def test_illegal_knobs_name_the_backend():
+    """Every derived error message names the offending backend (and the
+    capability-compatible alternatives come from the registry)."""
+    cases = [
+        (dict(backend="gather", hierarchy="fused"), "gather"),
+        (dict(backend="nh", hierarchy="fused"), "nh"),
+        (dict(backend="sharded", hierarchy="replay"), "sharded"),
+        (dict(backend="nh", hierarchy="replay"), "nh"),
+        (dict(backend="nh", method="approx"), "nh"),
+        (dict(backend="gather", use_pallas=True, hierarchy="none"), "gather"),
+        (dict(backend="sharded", use_pallas=True, hierarchy="none"),
+         "sharded"),
+        (dict(backend="dense", compress=True), "dense"),
+        (dict(backend="gather", compress=True, hierarchy="none"), "gather"),
+        (dict(backend="dense", mesh=object()), "dense"),
+        (dict(backend="nh", mesh=object(), hierarchy="none"), "nh"),
+    ]
+    for kwargs, name in cases:
+        with pytest.raises(ConfigError) as ei:
+            NucleusConfig(**kwargs).validate()
+        assert name in str(ei.value), \
+            f"{kwargs}: error must name backend {name!r}: {ei.value}"
+
+
+def test_auto_with_unsatisfiable_knobs_is_config_error():
+    # no registered backend honours pallas AND compress at once
+    with pytest.raises(ConfigError, match="auto"):
+        NucleusConfig(backend="auto", use_pallas=True,
+                      compress=True).validate()
+
+
+def test_register_rejects_duplicate_names():
+    entry = B.get("dense")
+    with pytest.raises(ValueError, match="already registered"):
+        B.register(entry)
+
+
+def test_runtime_registered_backend_is_live(problem):
+    """The module contract: one register() call and validate(), the legal
+    matrix and decompose() dispatch all follow — no snapshot staleness."""
+    class _Oracle:
+        name = "test_oracle"
+        capabilities = B.BackendCapabilities(
+            methods=("exact",), compiled_peel=False, records_trace=False,
+            knobs=frozenset(), summary="a runtime-registered test backend")
+
+        def run(self, prob, config):
+            from repro.core.nh_baseline import nh_coreness
+            core, rho = nh_coreness(prob)
+            return B.BackendResult(core=np.asarray(core), rounds=int(rho))
+
+    B.register(_Oracle())
+    try:
+        cfg = NucleusConfig(r=2, s=3, backend="test_oracle",
+                            hierarchy="two_phase")
+        cfg.validate()
+        legal = NucleusConfig.legal_combinations()
+        assert ("exact", "test_oracle", "two_phase") in legal
+        assert len(legal) == 29 + 3  # none/two_phase/basic, exact-only
+        dec = decompose(problem, cfg)
+        ref = decompose(problem, NucleusConfig(r=2, s=3, backend="nh",
+                                               hierarchy="two_phase"))
+        np.testing.assert_array_equal(dec.core, ref.core)
+        with pytest.raises(ConfigError, match="test_oracle"):
+            NucleusConfig(backend="test_oracle", hierarchy="fused",
+                          method="exact").validate()
+    finally:
+        del B._REGISTRY["test_oracle"]
+    assert len(NucleusConfig.legal_combinations()) == 29
+
+
+# ---------------------------------------------------------------------------
+# Conformance: every declared capability is exercised
+# ---------------------------------------------------------------------------
+
+def _conformance_combo(problem, method, backend, hierarchy):
+    caps = B.get(backend).capabilities
+    dec = decompose(problem, NucleusConfig(
+        r=2, s=3, method=method, backend=backend, hierarchy=hierarchy))
+    label = f"{method}/{backend}/{hierarchy}"
+    # rounds normalization: every backend adapter coerces (the old facade's
+    # sharded+fused branch did not)
+    assert type(dec.rounds) is int, label
+    if caps.records_trace:
+        assert dec.order_round is not None, label
+        assert dec.peel_value is not None, label
+    else:
+        assert dec.order_round is None, label
+    if hierarchy == "fused":
+        assert caps.compiled_peel, label
+        assert dec.uf_parent is not None and dec.uf_L is not None, label
+    assert dec.plan is not None and not dec.plan.was_auto, label
+    assert dec.plan.backend == backend, label
+
+
+@pytest.mark.parametrize("method,backend,hierarchy", [
+    pytest.param(m, b, h, id=f"{m}-{b}-{h}",
+                 marks=[] if b != "sharded" else [pytest.mark.slow])
+    for (m, b, h) in EXPECTED_LEGAL])
+def test_conformance_every_legal_triple(problem, method, backend, hierarchy):
+    _conformance_combo(problem, method, backend, hierarchy)
+
+
+# ---------------------------------------------------------------------------
+# Planner decision rules (explicit facts -> deterministic choices)
+# ---------------------------------------------------------------------------
+
+def _plan(cfg, *, n_r=1000, n_s=1000, n_sub=3, device_kind="cpu",
+          n_devices=1):
+    return B.resolve_plan(cfg, n_r=n_r, n_s=n_s, n_sub=n_sub,
+                          device_kind=device_kind, n_devices=n_devices)
+
+
+def test_planner_explicit_backend_is_kept():
+    p = _plan(NucleusConfig(backend="gather", hierarchy="two_phase"))
+    assert (p.backend, p.hierarchy) == ("gather", "two_phase")
+    assert not p.was_auto
+
+
+def test_planner_mesh_forces_sharded():
+    p = _plan(NucleusConfig(backend="auto", mesh=object()))
+    assert p.backend == "sharded" and p.was_auto
+
+
+def test_planner_compress_forces_sharded():
+    p = _plan(NucleusConfig(backend="auto", compress=True))
+    assert p.backend == "sharded"
+
+
+def test_planner_pallas_forces_dense():
+    p = _plan(NucleusConfig(backend="auto", use_pallas=True))
+    assert p.backend == "dense"
+
+
+def test_planner_accelerator_prefers_dense():
+    p = _plan(NucleusConfig(backend="auto"), device_kind="tpu")
+    assert p.backend == "dense"
+
+
+def test_planner_cpu_tiny_prefers_gather_else_dense():
+    assert _plan(NucleusConfig(backend="auto", hierarchy="auto"),
+                 n_r=B.TINY_NR - 1).backend == "gather"
+    assert _plan(NucleusConfig(backend="auto", hierarchy="auto"),
+                 n_r=B.TINY_NR).backend == "dense"
+
+
+def test_planner_multi_device_needs_enough_work():
+    big = B.SHARD_MIN_INCIDENCE
+    assert _plan(NucleusConfig(backend="auto"), n_devices=8,
+                 n_s=big, n_sub=1).backend == "sharded"
+    assert _plan(NucleusConfig(backend="auto"), n_devices=8,
+                 n_s=1000, n_sub=3).backend == "dense"
+
+
+def test_planner_memory_budget_steers_to_gather():
+    cfg = NucleusConfig(backend="auto", hierarchy="auto", build="chunked",
+                        memory_budget_bytes=1 << 10)
+    p = _plan(cfg, n_s=100_000, n_sub=3)
+    assert p.backend == "gather" and p.hierarchy == "replay"
+    # the default hierarchy='fused' needs a compiled loop, which overrides
+    # the budget preference (capability filter beats preference order)
+    fused = NucleusConfig(backend="auto", build="chunked",
+                          memory_budget_bytes=1 << 10)
+    assert _plan(fused, n_s=100_000, n_sub=3).backend == "dense"
+
+
+def test_planner_explicit_hierarchy_constrains_candidates():
+    # fused needs a compiled peel: tiny-on-cpu may not fall back to gather
+    p = _plan(NucleusConfig(backend="auto", hierarchy="fused"),
+              n_r=B.TINY_NR - 1)
+    assert p.backend == "dense"
+    assert p.hierarchy == "fused"
+
+
+def test_planner_hierarchy_auto_follows_capabilities():
+    assert _plan(NucleusConfig(backend="dense",
+                               hierarchy="auto")).hierarchy == "fused"
+    assert _plan(NucleusConfig(backend="gather",
+                               hierarchy="auto")).hierarchy == "replay"
+    assert _plan(NucleusConfig(backend="nh",
+                               hierarchy="auto")).hierarchy == "two_phase"
+    assert _plan(NucleusConfig(backend="sharded",
+                               hierarchy="auto")).hierarchy == "fused"
+
+
+def test_plan_report_is_human_readable():
+    p = _plan(NucleusConfig(backend="auto", hierarchy="auto"))
+    rep = p.report()
+    assert "backend='dense'" in rep and "requested backend='auto'" in rep
+    assert any(line.startswith("  - ") for line in rep.splitlines())
+
+
+# ---------------------------------------------------------------------------
+# Auto-planner parity vs explicit configs over the golden fixtures
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname", sorted(golden_suite()))
+def test_auto_parity_golden_fixtures(gname):
+    problem = build_problem(golden_suite()[gname](), 2, 3)
+    if problem.n_r == 0:
+        pytest.skip("no r-cliques")
+    auto = decompose(problem, NucleusConfig(r=2, s=3, backend="auto",
+                                            hierarchy="auto"))
+    assert auto.plan is not None and auto.plan.was_auto
+    explicit = decompose(problem, NucleusConfig(
+        r=2, s=3, backend=auto.config.backend,
+        hierarchy=auto.config.hierarchy))
+    np.testing.assert_array_equal(auto.core, explicit.core)
+    assert auto.rounds == explicit.rounds
+    if auto.order_round is not None:
+        np.testing.assert_array_equal(auto.order_round, explicit.order_round)
+        np.testing.assert_array_equal(auto.peel_value, explicit.peel_value)
+    if auto.has_hierarchy:
+        np.testing.assert_array_equal(np.asarray(auto.tree.parent),
+                                      np.asarray(explicit.tree.parent))
+        np.testing.assert_array_equal(np.asarray(auto.tree.level),
+                                      np.asarray(explicit.tree.level))
+
+
+def test_auto_plan_rides_the_serialized_artifact():
+    problem = build_problem(golden_suite()["planted40"](), 2, 3)
+    dec = decompose(problem, NucleusConfig(r=2, s=3, backend="auto",
+                                           hierarchy="auto"))
+    loaded = Decomposition.from_json(dec.to_json())
+    assert loaded.plan == dec.plan
+    assert loaded.plan_report() == dec.plan_report()
+    d = json.loads(dec.to_json())
+    assert d["plan"]["requested_backend"] == "auto"
+    assert d["config"]["backend"] == dec.plan.backend  # resolved, not auto

@@ -250,6 +250,44 @@ def test_json_rejects_foreign_blobs():
         Decomposition.from_json('{"format": "something-else"}')
 
 
+def test_json_rejects_unknown_version_actionably():
+    """Stale/future serving artifacts fail loudly, with the fix in the
+    message (regenerate or upgrade) — never a KeyError mid-query."""
+    import json as _json
+    from repro.core.api import JSON_FORMAT
+    dec = decompose(_problem("two_triangles", 2, 3),
+                    NucleusConfig(r=2, s=3, backend="dense",
+                                  hierarchy="fused"))
+    d = _json.loads(dec.to_json())
+    for bad in (99, "2", None):
+        d["version"] = bad
+        with pytest.raises(ValueError,
+                           match="unsupported Decomposition version") as ei:
+            Decomposition.from_json(_json.dumps(d))
+        assert "regenerate" in str(ei.value)
+    # a missing format key is a foreign blob, not a version problem
+    with pytest.raises(ValueError, match=JSON_FORMAT):
+        Decomposition.from_json("{}")
+
+
+def test_json_accepts_version1_artifacts():
+    """Pre-plan (version 1) artifacts still load and serve; the plan is
+    simply absent."""
+    import json as _json
+    dec = decompose(_problem("two_triangles", 2, 3),
+                    NucleusConfig(r=2, s=3, backend="dense",
+                                  hierarchy="fused"))
+    d = _json.loads(dec.to_json())
+    d["version"] = 1
+    d.pop("plan")
+    loaded = Decomposition.from_json(_json.dumps(d))
+    assert loaded.plan is None
+    assert "not recorded" in loaded.plan_report()
+    np.testing.assert_array_equal(loaded.core, dec.core)
+    for c in sorted(set(int(x) for x in dec.core if x > 0)):
+        np.testing.assert_array_equal(loaded.cut(c), dec.cut(c))
+
+
 # ---------------------------------------------------------------------------
 # Vectorized nucleus_vertex_sets parity (satellite of this refactor)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,206 @@
+"""The warm ``Session`` front door (DESIGN.md §8).
+
+Contracts:
+  * PARITY — ``Session(cfg).decompose(p)`` is array-for-array identical to
+    ``decompose(p, cfg)`` (core, rounds, trace, forest, tree) on every
+    golden fixture, for exact and approximate peels: the shape padding
+    (ghost s-rows + pre-peeled ghost r-cliques) and the schedule
+    canonicalization are behaviour-invisible.
+  * BUCKETS — similar-but-distinct shapes land in one shape class
+    (``stats`` shows warm hits), the padding helpers hit the documented
+    boundaries, and canonicalized schedules preserve the approx round cap.
+  * FALLBACK — configs that resolve off the dense engine still work (and
+    are counted as fallbacks), including ``backend='auto'``.
+"""
+import numpy as np
+import pytest
+
+from repro.core import NucleusConfig, Session, build_problem, decompose
+from repro.core.schedule import PeelSchedule
+from repro.core.session import bucket_size, canonical_schedule
+from repro.graph import generators
+from repro.graph.generators import golden_suite
+
+pytestmark = pytest.mark.fast
+
+GRAPHS = golden_suite()
+
+
+def _assert_same(dec_s, dec_c, label):
+    np.testing.assert_array_equal(dec_s.core, dec_c.core,
+                                  err_msg=f"{label}: core")
+    assert dec_s.rounds == dec_c.rounds, label
+    assert type(dec_s.rounds) is int, label
+    np.testing.assert_array_equal(dec_s.order_round, dec_c.order_round,
+                                  err_msg=f"{label}: order_round")
+    np.testing.assert_array_equal(dec_s.peel_value, dec_c.peel_value,
+                                  err_msg=f"{label}: peel_value")
+    if dec_c.has_hierarchy:
+        np.testing.assert_array_equal(np.asarray(dec_s.tree.parent),
+                                      np.asarray(dec_c.tree.parent),
+                                      err_msg=f"{label}: tree parent")
+        np.testing.assert_array_equal(np.asarray(dec_s.tree.level),
+                                      np.asarray(dec_c.tree.level),
+                                      err_msg=f"{label}: tree level")
+
+
+# ---------------------------------------------------------------------------
+# Padding + canonicalization helpers
+# ---------------------------------------------------------------------------
+
+def test_bucket_size_boundaries():
+    assert bucket_size(0) == 64
+    assert bucket_size(1) == 64
+    assert bucket_size(64) == 64
+    assert bucket_size(65) == 128
+    assert bucket_size(128) == 128
+    assert bucket_size(129) == 256
+    assert bucket_size(3, floor=2) == 4
+
+
+def test_canonical_schedule_exact_ignores_graph_size():
+    a = canonical_schedule("exact", 3, 0.1, 10)
+    b = canonical_schedule("exact", 3, 0.5, 10_000)
+    assert a == b  # one static jit key for the whole exact class
+
+
+def test_canonical_schedule_approx_preserves_cap():
+    for n in (2, 10, 100, 1_000, 50_000):
+        for delta in (0.1, 0.5):
+            full = PeelSchedule(kind="approx", s_choose_r=3, delta=delta,
+                                n=n)
+            canon = canonical_schedule("approx", 3, delta, n)
+            assert canon.cap() == full.cap(), (n, delta)
+            assert canon.n <= n or n < 2
+            if canon.n > 2:  # minimality: one less vertex drops the cap
+                smaller = PeelSchedule(kind="approx", s_choose_r=3,
+                                       delta=delta, n=canon.n - 1)
+                assert smaller.cap() < full.cap(), (n, delta)
+
+
+def test_same_cap_graphs_share_a_bucket():
+    # delta is deliberately coarse: at delta=1.5 the approx round cap is
+    # flat across nearby vertex counts, so canonicalization collapses the
+    # two schedules onto one static key (at tiny delta the cap — and hence
+    # the bucket — legitimately moves with nearly every n)
+    cfg = NucleusConfig(r=2, s=3, method="approx", delta=1.5,
+                        backend="dense", hierarchy="none")
+    sess = Session(cfg)
+    p1 = build_problem(generators.planted_cliques(40, [8, 6], 0.05, seed=1),
+                       2, 3)
+    p2 = build_problem(generators.planted_cliques(41, [8, 6], 0.05, seed=2),
+                       2, 3)
+    k1, k2 = sess.bucket_key(p1), sess.bucket_key(p2)
+    # distinct graph sizes, same schedule class + shape class
+    assert p1.g.n != p2.g.n
+    assert k1 == k2
+
+
+# ---------------------------------------------------------------------------
+# Parity vs decompose()
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname", sorted(GRAPHS))
+def test_session_parity_exact_fused(gname):
+    problem = build_problem(GRAPHS[gname](), 2, 3)
+    if problem.n_r == 0:
+        pytest.skip("no r-cliques")
+    cfg = NucleusConfig(r=2, s=3, backend="dense", hierarchy="fused")
+    _assert_same(Session(cfg).decompose(problem), decompose(problem, cfg),
+                 gname)
+
+
+@pytest.mark.parametrize("gname", ["two_triangles", "planted40", "er20"])
+def test_session_parity_approx(gname):
+    problem = build_problem(GRAPHS[gname](), 2, 3)
+    cfg = NucleusConfig(r=2, s=3, method="approx", delta=0.25,
+                        backend="dense", hierarchy="fused")
+    _assert_same(Session(cfg).decompose(problem), decompose(problem, cfg),
+                 gname)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("r,s", [(1, 2), (3, 4)])
+def test_session_parity_other_rs(r, s):
+    problem = build_problem(GRAPHS["planted40"](), r, s)
+    if problem.n_r == 0:
+        pytest.skip("no r-cliques")
+    cfg = NucleusConfig(r=r, s=s, backend="dense", hierarchy="fused")
+    _assert_same(Session(cfg).decompose(problem), decompose(problem, cfg),
+                 f"r{r}s{s}")
+
+
+def test_session_accepts_graphs_and_builds_problems():
+    g = generators.planted_cliques(90, [9, 7], 0.04, seed=5)
+    cfg = NucleusConfig(r=2, s=3, backend="dense", hierarchy="none")
+    _assert_same(Session(cfg).decompose(g), decompose(g, cfg), "from-graph")
+
+
+# ---------------------------------------------------------------------------
+# Bucketing + stats
+# ---------------------------------------------------------------------------
+
+def test_same_bucket_stream_is_warm():
+    cfg = NucleusConfig(r=2, s=3, backend="dense", hierarchy="fused")
+    sess = Session(cfg)
+    graphs = [generators.planted_cliques(100 + 3 * i, [10, 8], 0.03,
+                                         seed=20 + i) for i in range(4)]
+    problems = [build_problem(g, 2, 3) for g in graphs]
+    shapes = {(p.n_r, p.n_s) for p in problems}
+    assert len(shapes) > 1, "stream must have distinct shapes"
+    decs = sess.decompose_many(problems)
+    assert len(decs) == 4
+    assert len(sess.stats["buckets"]) == 1, sess.stats
+    assert sess.stats["cold"] == 1 and sess.stats["warm"] == 3, sess.stats
+    for p, d in zip(problems, decs):
+        _assert_same(d, decompose(p, cfg), f"n_r={p.n_r}")
+
+
+def test_fallback_backends_still_work():
+    problem = build_problem(GRAPHS["two_triangles"](), 2, 3)
+    for backend, hierarchy in [("gather", "replay"), ("nh", "two_phase")]:
+        cfg = NucleusConfig(r=2, s=3, backend=backend, hierarchy=hierarchy)
+        sess = Session(cfg)
+        dec = sess.decompose(problem)
+        assert sess.stats["fallback"] == 1
+        np.testing.assert_array_equal(dec.core,
+                                      decompose(problem, cfg).core)
+
+
+def test_use_pallas_pins_the_cold_path():
+    problem = build_problem(GRAPHS["planted40"](), 2, 3)
+    cfg = NucleusConfig(r=2, s=3, backend="dense", hierarchy="fused",
+                        use_pallas=True)
+    sess = Session(cfg)
+    dec = sess.decompose(problem)
+    assert sess.stats["fallback"] == 1
+    _assert_same(dec, decompose(problem, cfg), "pallas-pinned")
+
+
+def test_fallback_preserves_auto_plan_provenance():
+    """The fallback path executes the already-planned config — the
+    serialized plan must still say 'auto' was requested, with the
+    planner's real reasons (not 'explicitly configured')."""
+    tiny = build_problem(GRAPHS["two_triangles"](), 2, 3)  # n_r < TINY_NR
+    sess = Session(NucleusConfig(r=2, s=3, backend="auto",
+                                 hierarchy="auto"))
+    dec = sess.decompose(tiny)
+    ref = decompose(tiny, NucleusConfig(r=2, s=3, backend="auto",
+                                        hierarchy="auto"))
+    assert sess.stats["fallback"] == 1  # tiny-on-cpu resolves off dense
+    assert dec.plan == ref.plan
+    assert dec.plan.was_auto
+    assert dec.plan.requested_backend == "auto"
+    assert "explicitly configured" not in dec.plan_report()
+
+
+def test_session_resolves_auto_per_problem():
+    big = generators.planted_cliques(120, [10, 8], 0.03, seed=7)
+    sess = Session(NucleusConfig(r=2, s=3, backend="auto",
+                                 hierarchy="auto"))
+    dec = sess.decompose(big)
+    assert dec.plan is not None and dec.plan.was_auto
+    assert dec.config.backend in ("dense", "gather")
+    _assert_same(dec, decompose(big, NucleusConfig(
+        r=2, s=3, backend=dec.config.backend,
+        hierarchy=dec.config.hierarchy)), "auto-session")
