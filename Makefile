@@ -7,7 +7,8 @@
 VERIFY_BUDGET ?= 3300
 FAST_BUDGET ?= 2100
 
-.PHONY: verify verify-fast bench quick-bench regen-golden smoke bench-build
+.PHONY: verify verify-fast bench quick-bench regen-golden smoke bench-build \
+	calibrate kernel-tests
 
 verify:
 	JAX_PLATFORMS=cpu PYTHONPATH=src timeout $(VERIFY_BUDGET) \
@@ -25,6 +26,25 @@ bench:
 
 quick-bench:
 	JAX_PLATFORMS=cpu PYTHONPATH=src python -m benchmarks.run --quick
+
+# the Pallas kernel suite alone (interpret mode on CPU): the CI fast lane
+# runs this as an explicit first step so a kernel-vs-oracle divergence is
+# named in the job log before the full matrix runs
+kernel-tests:
+	JAX_PLATFORMS=cpu PYTHONPATH=src timeout 900 \
+		python -m pytest -x -q -m "not slow" \
+		tests/test_kernels.py tests/test_peel_round.py
+
+# measure this device's planner crossovers (tiny_nr, the use_pallas=None
+# verdict) and write the profile resolve_plan loads; the committed
+# src/repro/core/planner_profile.json is this target's output on the
+# reference CPU container.  CALIBRATE_FLAGS="--quick" for the CI smoke.
+CALIBRATE_OUT ?= src/repro/core/planner_profile.json
+CALIBRATE_FLAGS ?=
+calibrate:
+	JAX_PLATFORMS=cpu PYTHONPATH=src timeout 1800 \
+		python tools/calibrate_planner.py --out $(CALIBRATE_OUT) \
+		$(CALIBRATE_FLAGS)
 
 # rewrite tests/golden/*.json from the oracle-pinned gather+replay path;
 # the JSON diff is the review artifact for any intentional semantic change

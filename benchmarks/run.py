@@ -3,7 +3,10 @@
 `python -m benchmarks.run [--quick] [--only fig6,fig9] [--json out.json]`
 prints `name,us_per_call,derived` CSV rows, then the roofline table if
 dry-run artifacts exist; `--json` additionally writes the rows as a JSON
-artifact (what the CI bench job uploads).
+artifact (what the CI bench job uploads).  Every row — CSV header comment
+and JSON alike — is stamped with the device that produced it (platform,
+device kind, device count), so archived artifacts say what hardware they
+measured.
 
 The `engine` lane (and the engine rows inside fig8) time the compiled
 `lax.while_loop` peel engine against the eager dense round loop it replaced;
@@ -31,6 +34,18 @@ def _parse_row(row: str) -> dict:
     return {"name": name, "us_per_call": float(us), "derived": derived}
 
 
+def _device_meta() -> dict:
+    """Which hardware produced the rows — stamped into every lane's JSON
+    output so EXPERIMENTS.md tables (and the planner-calibration story)
+    can say what they were measured on."""
+    import jax
+    return {
+        "platform": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+        "device_count": jax.device_count(),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -51,23 +66,27 @@ def main() -> None:
             print(f"{name}: {doc}")
         return
     only = set(filter(None, args.only.split(",")))
+    meta = _device_meta()
     collected = []
     print("name,us_per_call,derived")
+    print(f"# device: platform={meta['platform']} "
+          f"kind={meta['device_kind']!r} count={meta['device_count']}",
+          flush=True)
     for name, fn in bench_paper.ALL.items():
         if only and name not in only:
             continue
         try:
             for r in fn(quick=args.quick):
                 print(r, flush=True)
-                collected.append(_parse_row(r))
+                collected.append({**_parse_row(r), **meta})
         except Exception as e:  # keep the suite running
             print(f"{name}/ERROR,0,{e!r}", flush=True)
             collected.append({"name": f"{name}/ERROR", "us_per_call": 0.0,
-                              "derived": repr(e)})
+                              "derived": repr(e), **meta})
 
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"rows": collected}, f, indent=1)
+            json.dump({"meta": meta, "rows": collected}, f, indent=1)
             f.write("\n")
 
     if not args.skip_roofline and not only:

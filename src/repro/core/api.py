@@ -570,7 +570,8 @@ def plan_config(problem: NucleusProblem,
     ``decompose()`` and ``Session`` so the two front doors cannot drift.
     """
     plan = backend_registry.resolve_plan(
-        config, n_r=problem.n_r, n_s=problem.n_s, n_sub=problem.n_sub)
+        config, n_r=problem.n_r, n_s=problem.n_s, n_sub=problem.n_sub,
+        r=problem.r, s=problem.s)
     if (plan.backend, plan.hierarchy) != (config.backend, config.hierarchy):
         config = dataclasses.replace(config, backend=plan.backend,
                                      hierarchy=plan.hierarchy)

@@ -40,6 +40,7 @@ from typing import (Any, Callable, Dict, List, Optional, Protocol, Tuple,
 
 import numpy as np
 
+from . import planner_profile
 from .incidence import NucleusProblem
 
 METHODS = ("exact", "approx")
@@ -64,6 +65,12 @@ class BackendCapabilities:
         (``hierarchy='replay'`` legal).
     ``knobs``: device knobs the backend honours ("pallas"/"mesh"/
         "compress").
+    ``fast_lanes``: special-case engine lanes the backend routes to by
+        itself (e.g. "kcore": the r1s2 vertex-degree peel with the
+        one-shot edge-list link fixpoint) — declared so the planner can
+        *record* the routing in ``Plan.reasons``; legality is unaffected
+        (a fast lane is an internal specialization, not a capability a
+        config can request).
     ``summary``: one-line description, quoted in derived error messages
         and ``plan_report()``.
     """
@@ -73,6 +80,7 @@ class BackendCapabilities:
     records_trace: bool
     knobs: frozenset
     summary: str
+    fast_lanes: Tuple[str, ...] = ()
 
     @property
     def hierarchies(self) -> Tuple[str, ...]:
@@ -245,8 +253,14 @@ def check_capabilities(config) -> None:
 # incidence plus two boolean/int views of it every round (~3 int32 reads);
 # if that working set exceeds memory_budget_bytes, the work-efficient
 # gather backend (touches only incident s-cliques per round) is preferred.
-TINY_NR = 64
-SHARD_MIN_INCIDENCE = 1 << 20
+#
+# TINY_NR / SHARD_MIN_INCIDENCE are the *static fallback* values (re-
+# exported from ``planner_profile``): ``resolve_plan`` prefers the
+# measured per-device crossovers of ``planner_profile.json`` (written by
+# ``tools/calibrate_planner.py``) and records which source fired in the
+# Plan reasons.
+TINY_NR = planner_profile.STATIC_TINY_NR
+SHARD_MIN_INCIDENCE = planner_profile.STATIC_SHARD_MIN_INCIDENCE
 DENSE_ROUND_BYTES_PER_ENTRY = 12
 
 
@@ -319,7 +333,9 @@ def candidate_backends(config) -> List[Backend]:
 
 def resolve_plan(config, *, n_r: int, n_s: int, n_sub: int,
                  device_kind: Optional[str] = None,
-                 n_devices: Optional[int] = None) -> Plan:
+                 n_devices: Optional[int] = None,
+                 r: Optional[int] = None, s: Optional[int] = None,
+                 profile_path: Optional[str] = None) -> Plan:
     """Resolve ``backend='auto'`` / ``hierarchy='auto'`` to concrete axes.
 
     Problem facts come in as plain ints so the rules are unit-testable;
@@ -330,16 +346,26 @@ def resolve_plan(config, *, n_r: int, n_s: int, n_sub: int,
       1. an explicit backend is kept as-is;
       2. knobs bind: ``mesh``/``compress`` force the sharded collective,
          ``use_pallas`` the dense engine;
-      3. multi-device + enough incidence work (>= SHARD_MIN_INCIDENCE
+      3. multi-device + enough incidence work (>= the shard crossover
          entries) -> sharded;
       4. a ``memory_budget_bytes`` smaller than the dense engine's
          per-round working set -> gather (work-efficient);
       5. accelerator -> dense (compiled engine);
-      6. CPU: tiny problems (< TINY_NR r-cliques) -> gather (no compile),
-         everything else -> dense.
+      6. CPU: tiny problems (below the compile-vs-eager crossover) ->
+         gather (no compile), everything else -> dense.
+
+    The crossover thresholds of rules 3 and 6 come from the loaded
+    ``planner_profile.json`` entry for this device kind (measured by
+    ``tools/calibrate_planner.py``), falling back to the static
+    ``TINY_NR``/``SHARD_MIN_INCIDENCE`` constants; the Plan reasons
+    record which source fired.  ``profile_path`` overrides the profile
+    location (tests).
 
     ``hierarchy='auto'`` then picks the richest strategy the resolved
-    backend supports: fused > replay > two_phase.
+    backend supports: fused > replay > two_phase.  When (r, s) = (1, 2)
+    and the resolved backend declares the "kcore" fast lane, the reasons
+    additionally record that the degenerate k-core case routes to the
+    dedicated vertex-peel engine lane.
     """
     reasons: List[str] = []
     cands = candidate_backends(config)
@@ -357,6 +383,15 @@ def resolve_plan(config, *, n_r: int, n_s: int, n_sub: int,
             device_kind = device_kind or jax.default_backend()
             n_devices = n_devices if n_devices is not None \
                 else len(jax.devices())
+        prof = planner_profile.thresholds(device_kind=device_kind,
+                                          platform=device_kind,
+                                          path=profile_path)
+        tiny_nr = prof["tiny_nr"]
+        shard_min = prof["shard_min_incidence"]
+        prof_src = prof["source"]
+        reasons.append(
+            f"thresholds: tiny_nr={tiny_nr}, "
+            f"shard_min_incidence={shard_min} ({prof_src})")
         budget = config.memory_budget_bytes
         dense_round_bytes = DENSE_ROUND_BYTES_PER_ENTRY * n_s * n_sub
 
@@ -374,13 +409,13 @@ def resolve_plan(config, *, n_r: int, n_s: int, n_sub: int,
                            "compress=True implies the sharded collective")
         if backend is None and config.use_pallas:
             backend = pick("dense", "use_pallas=True selects the dense "
-                                    "engine's Pallas scatter")
+                                    "engine's Pallas round megakernel")
         if backend is None and n_devices > 1 and \
-                n_s * n_sub >= SHARD_MIN_INCIDENCE:
+                n_s * n_sub >= shard_min:
             backend = pick(
                 "sharded",
                 f"{n_devices} devices and {n_s * n_sub} incidence entries "
-                f">= {SHARD_MIN_INCIDENCE}: partition the s-clique axis")
+                f">= {shard_min} ({prof_src}): partition the s-clique axis")
         if backend is None and budget is not None and \
                 dense_round_bytes > budget:
             backend = pick(
@@ -391,11 +426,12 @@ def resolve_plan(config, *, n_r: int, n_s: int, n_sub: int,
         if backend is None and device_kind != "cpu":
             backend = pick("dense", f"accelerator ({device_kind}): the "
                                     f"compiled engine is the fast path")
-        if backend is None and n_r < TINY_NR:
+        if backend is None and n_r < tiny_nr:
             backend = pick(
                 "gather",
-                f"tiny problem (n_r={n_r} < {TINY_NR}) on cpu: the eager "
-                f"work-efficient loop beats paying an XLA compile")
+                f"tiny problem (n_r={n_r} < {tiny_nr}, {prof_src}) on "
+                f"cpu: the eager work-efficient loop beats paying an XLA "
+                f"compile")
         if backend is None:
             backend = pick("dense", f"cpu default (n_r={n_r}): the "
                                     f"compiled engine amortizes its "
@@ -408,6 +444,11 @@ def resolve_plan(config, *, n_r: int, n_s: int, n_sub: int,
                 f"method/hierarchy/knobs)")
 
     caps = get(backend).capabilities
+    if (r, s) == (1, 2) and "kcore" in caps.fast_lanes:
+        reasons.append(
+            f"fast lane 'kcore': (r, s) = (1, 2) on backend {backend!r} — "
+            f"vertex-degree peel with the one-shot edge-list link "
+            f"fixpoint, no incidence-table indirection")
     if config.hierarchy != AUTO:
         hierarchy = config.hierarchy
         reasons.append(f"hierarchy {hierarchy!r}: explicitly configured")
@@ -491,7 +532,8 @@ register(_Registered(
     capabilities=BackendCapabilities(
         methods=("exact", "approx"), compiled_peel=True, records_trace=True,
         knobs=frozenset({"pallas"}),
-        summary="the compiled single-device lax.while_loop engine"),
+        summary="the compiled single-device lax.while_loop engine",
+        fast_lanes=("kcore",)),
     _run=_run_dense))
 
 register(_Registered(

@@ -47,6 +47,8 @@ import numpy as np
 
 from ..graph import INT
 from ..graph.unionfind import uf_union_edges
+from ..kernels.peel_round import (chunk_windows, fused_peel_round,
+                                  peel_round_plan)
 from ..kernels.segment_sum import (DEFAULT_BLOCK_N, DEFAULT_CHUNK_E,
                                    segment_sum_sorted, sorted_ids_plan)
 from .incidence import NucleusProblem
@@ -62,12 +64,20 @@ def make_schedule(problem: NucleusProblem, kind: str,
 
 
 def pallas_by_default() -> bool:
-    """THE default-scatter policy: Pallas on TPU, XLA scatter-add
-    elsewhere (interpret-mode Pallas is a correctness oracle, not a fast
-    path).  ``dense_coreness(use_pallas=None)`` resolves through this, and
-    ``core.session`` consults the same predicate to decide when a config
-    *defaults* onto the per-problem Pallas plan (and must take the cold
-    path) — one place to change if the policy ever widens."""
+    """THE default-kernel policy: what ``use_pallas=None`` resolves to.
+
+    Consults the loaded planner profile (``core.planner_profile``, the
+    telemetry written by ``tools/calibrate_planner.py``) for a measured
+    ``pallas_default`` verdict on this device; when no profile entry
+    covers the platform it warns once and falls back to the static oracle
+    (Pallas on TPU, XLA scatter-add elsewhere — interpret-mode Pallas is a
+    correctness oracle, not a fast path).  ``dense_coreness`` and
+    ``core.session`` both resolve through here — one place to change if
+    the policy ever widens."""
+    from .planner_profile import pallas_default
+    v = pallas_default(jax.default_backend())
+    if v is not None:
+        return v
     return jax.default_backend() == "tpu"
 
 
@@ -232,7 +242,8 @@ def link_fixpoint(parent, L, core, la, lb, lvalid, *, max_gens: int):
 def peel_round(inc_rid, deg, peeled, s_alive, core, order_round, sched,
                rounds, schedule: PeelSchedule, *,
                reduce_delta: Optional[Callable] = None, resid=None,
-               scatter: Optional[Callable] = None):
+               scatter: Optional[Callable] = None,
+               fused_round: Optional[Callable] = None):
     """THE peel-round body — every backend runs exactly this.
 
     inc_rid: (n_s_local, C) member r-clique ids (-1 rows = ghost padding);
@@ -242,14 +253,27 @@ def peel_round(inc_rid, deg, peeled, s_alive, core, order_round, sched,
 
     reduce_delta(delta, resid) -> (delta, resid) is the distributed
     all-reduce hook (identity when None); scatter(dead_now) -> (n_r,) delta
-    overrides the decrement implementation (Pallas path).  The round's
-    peeled set a_mask is returned so the fused hierarchy path can generate
-    its links without recomputing the bucket.
+    overrides the decrement implementation (Pallas scatter path).  The
+    round's peeled set a_mask is returned so the fused hierarchy path can
+    generate its links without recomputing the bucket.
+
+    fused_round(deg, peeled, core, order, level, rounds) -> (deg, peeled,
+    core, order) replaces the ENTIRE select + gather + decrement chain
+    (the Pallas round megakernel, or the r1s2 vertex-peel fast lane); the
+    schedule advance and dmin reduction stay here, s_alive passes through
+    untouched (the megakernel derives liveness from ``peeled``, DESIGN.md
+    §9), and a_mask is recovered from the peeled delta.
     """
     n_r = deg.shape[0]
     live_deg = jnp.where(peeled, BIG, deg)
     dmin = jnp.min(live_deg)
     sched, level = schedule.next_level(sched, dmin)
+    if fused_round is not None:
+        deg, peeled_new, core, order_round = fused_round(
+            deg, peeled, core, order_round, level, rounds)
+        a_mask = peeled_new & ~peeled
+        return (deg, peeled_new, s_alive, core, order_round, sched, resid,
+                a_mask)
     a_mask = (~peeled) & (deg <= level)
     core = jnp.where(a_mask, level, core)
     order_round = jnp.where(a_mask, rounds, order_round)
@@ -273,6 +297,7 @@ def run_peel_engine(inc_rid, deg0, schedule: PeelSchedule, *,
                     reduce_delta: Optional[Callable] = None,
                     resid0=None, alive0=None,
                     scatter: Optional[Callable] = None,
+                    fused_round: Optional[Callable] = None,
                     hierarchy: bool = False, link0=None,
                     gather_links: Optional[Callable] = None,
                     peeled0=None):
@@ -332,7 +357,8 @@ def run_peel_engine(inc_rid, deg0, schedule: PeelSchedule, *,
         deg, peeled, alive, core, order, sched, rounds, resid = carry[:8]
         deg, peeled, alive, core, order, sched, resid, a_mask = peel_round(
             inc_rid, deg, peeled, alive, core, order, sched, rounds,
-            schedule, reduce_delta=reduce_delta, resid=resid, scatter=scatter)
+            schedule, reduce_delta=reduce_delta, resid=resid,
+            scatter=scatter, fused_round=fused_round)
         link = carry[8:]
         # no s-cliques -> no links ever; also keeps all_gather away from
         # zero-size operands (XLA rejects an empty all_gather dim)
@@ -360,14 +386,50 @@ def run_peel_engine(inc_rid, deg0, schedule: PeelSchedule, *,
 # Single-device dense backend: jitted entry + Pallas scatter plan
 # ---------------------------------------------------------------------------
 
+# Plan-memory ceiling for the round megakernel: the per-edge member matrix
+# is E * C int32 (each CSR edge carries its s-clique's full member row so
+# the in-kernel dead test needs no second indirection).  Past this the
+# scatter-only Pallas path (plan = 2 * E int32) takes over — fallback rule
+# #2 of DESIGN.md §9.
+MEGAKERNEL_PLAN_BUDGET_BYTES = 1 << 29
+
+
 @partial(jax.jit, static_argnames=("schedule", "max_rounds", "spec",
-                                   "hierarchy"))
-def _dense_engine(inc_rid, deg0, plan_rids, plan_sids, peeled0, *,
+                                   "hierarchy", "fused"))
+def _dense_engine(inc_rid, deg0, plan_a, plan_b, peeled0, *,
                   schedule: PeelSchedule, max_rounds: int,
-                  spec: Optional[ScatterSpec], hierarchy: bool = False):
+                  spec: Optional[ScatterSpec], hierarchy: bool = False,
+                  fused: bool = False):
+    """The jitted dense entry.  spec=None: pure-XLA round body.  spec set
+    with fused=True: (plan_a, plan_b) = (ids, members) of the round
+    megakernel — one Pallas launch replaces the whole select + gather +
+    decrement chain.  spec set with fused=False: (plan_a, plan_b) =
+    (rids, sids) of the scatter-only Pallas path (the decrement alone)."""
     n_r = deg0.shape[0]
     scatter = None
-    if spec is not None:
+    fused_round = None
+    if spec is not None and fused:
+        ids, members = plan_a, plan_b
+        # loop-invariant per-block chunk windows: computed once out here,
+        # closed over by every round's kernel launch
+        c0, nch = chunk_windows(ids, spec.n_seg_pad, spec.block_n,
+                                spec.chunk_e, spec.max_chunks)
+        pad = spec.n_seg_pad - n_r
+
+        def fused_round(deg, peeled, core, order, level, rnd):
+            degp = jnp.concatenate([deg, jnp.zeros((pad,), INT)])
+            peeledp = jnp.concatenate(
+                [peeled.astype(INT), jnp.ones((pad,), INT)])
+            corep = jnp.concatenate([core, jnp.full((pad,), -1, INT)])
+            orderp = jnp.concatenate([order, jnp.full((pad,), -1, INT)])
+            d, p, c, o = fused_peel_round(
+                ids, members, degp, peeledp, corep, orderp, level, rnd,
+                c0, nch, block_n=spec.block_n, chunk_e=spec.chunk_e,
+                max_chunks=spec.max_chunks, interpret=spec.interpret)
+            return d[:n_r], p[:n_r] > 0, c[:n_r], o[:n_r]
+    elif spec is not None:
+        plan_rids, plan_sids = plan_a, plan_b
+
         def scatter(dead_now):
             data = dead_now[plan_sids].astype(INT)[:, None]
             out = segment_sum_sorted(data, plan_rids, spec.n_seg_pad,
@@ -377,8 +439,8 @@ def _dense_engine(inc_rid, deg0, plan_rids, plan_sids, peeled0, *,
                                      interpret=spec.interpret)
             return out[:n_r, 0]
     return run_peel_engine(inc_rid, deg0, schedule, max_rounds=max_rounds,
-                           scatter=scatter, hierarchy=hierarchy,
-                           peeled0=peeled0)
+                           scatter=scatter, fused_round=fused_round,
+                           hierarchy=hierarchy, peeled0=peeled0)
 
 
 def _scatter_plan(problem: NucleusProblem, block_n: int, chunk_e: int,
@@ -411,6 +473,55 @@ def _scatter_plan(problem: NucleusProblem, block_n: int, chunk_e: int,
     return cache[key]
 
 
+def _plan_arrays(problem: NucleusProblem):
+    """(rids, members) of the rid-sorted CSR edge plan, eager numpy."""
+    counts = np.diff(np.asarray(problem.mem_offsets))
+    rids = np.repeat(np.arange(problem.n_r, dtype=np.int32), counts)
+    members = np.asarray(problem.inc_rid)[np.asarray(problem.mem_sids,
+                                                     np.int64)]
+    return rids, members
+
+
+def _round_plan(problem: NucleusProblem, block_n: int, chunk_e: int,
+                interpret: bool, *, e_pad: Optional[int] = None,
+                n_r_pad: Optional[int] = None,
+                max_chunks: Optional[int] = None,
+                pow2_chunks: bool = False):
+    """Megakernel plan: (ids, members, spec), memoized on the problem.
+
+    Edge k of the flat CSR is rid ``ids[k]`` inside the s-clique whose full
+    member row is ``members[k]`` — everything the fused dead test needs,
+    gathered once at plan-build time.  The optional pad overrides let
+    ``core.session`` shape the plan to its pow2 buckets so same-bucket
+    problems share one executable; ``pow2_chunks`` additionally rounds the
+    (data-dependent) per-block chunk-span bound up to a power of two
+    (floor 8, capped at the total chunk count) so it stops fragmenting the
+    bucket's jit key.
+    """
+    key = ("round", block_n, chunk_e, interpret, e_pad, n_r_pad, max_chunks,
+           pow2_chunks)
+    cache = getattr(problem, "_scatter_plans", None)
+    if cache is None:
+        cache = {}
+        problem._scatter_plans = cache
+    if key in cache:
+        return cache[key]
+    rids, members = _plan_arrays(problem)
+    ids_pad, members_pad, n_r_pad, max_chunks = peel_round_plan(
+        rids, members, problem.n_r, block_n=block_n, chunk_e=chunk_e,
+        e_pad=e_pad, n_r_pad=n_r_pad, max_chunks=max_chunks)
+    if pow2_chunks:
+        mc = max(max_chunks, 8)
+        mc = 1 << (mc - 1).bit_length()
+        max_chunks = min(mc, ids_pad.shape[0] // chunk_e)
+        max_chunks = max(max_chunks, 1)
+    spec = ScatterSpec(block_n=block_n, chunk_e=chunk_e,
+                       max_chunks=max_chunks, n_seg_pad=n_r_pad,
+                       interpret=interpret)
+    cache[key] = (jnp.asarray(ids_pad), jnp.asarray(members_pad), spec)
+    return cache[key]
+
+
 def dense_coreness(problem: NucleusProblem, schedule: PeelSchedule, *,
                    use_pallas: Optional[bool] = None,
                    max_rounds: Optional[int] = None,
@@ -418,13 +529,25 @@ def dense_coreness(problem: NucleusProblem, schedule: PeelSchedule, *,
                    chunk_e: int = DEFAULT_CHUNK_E,
                    interpret: Optional[bool] = None,
                    hierarchy: bool = False,
-                   peeled0=None):
+                   peeled0=None,
+                   plan=None,
+                   fused_kernel: Optional[bool] = None):
     """One jitted call: (core_raw, order_round, rounds) for the whole peel.
 
-    use_pallas=None picks the Pallas scatter on TPU and the XLA scatter-add
-    elsewhere (Pallas interpret mode is a correctness oracle, not a fast
-    path).  Raw bucket values are returned — approx clipping is the
-    caller's job so the trace keeps the values that drove LINK equality.
+    use_pallas=None resolves through ``pallas_by_default()`` — the planner
+    profile's measured verdict when one covers this device, else Pallas on
+    TPU (Pallas interpret mode is a correctness oracle, not a fast path).
+    Raw bucket values are returned — approx clipping is the caller's job
+    so the trace keeps the values that drove LINK equality.
+
+    With Pallas on, the round MEGAKERNEL (``kernels.peel_round``: select +
+    dead-s-clique gather + segment decrement in one launch) is the default
+    round body; the scatter-only Pallas path remains as the fallback when
+    the per-edge member plan would exceed MEGAKERNEL_PLAN_BUDGET_BYTES
+    (fused_kernel=True/False forces the choice; DESIGN.md §9 has the full
+    fallback ladder).  ``plan=(ids, members, spec)`` injects a prebuilt
+    megakernel plan — ``core.session`` passes its pow2-bucketed plan so
+    warm calls share one executable.
 
     hierarchy=True fuses the ANH-EL link fixpoint into the same compiled
     call and appends the join forest (parent, L) to the return tuple.
@@ -438,14 +561,27 @@ def dense_coreness(problem: NucleusProblem, schedule: PeelSchedule, *,
     if max_rounds is None:
         max_rounds = problem.n_r + 2
     dummy = jnp.zeros((0,), INT)
+    plan_a, plan_b, spec = dummy, dummy, None
+    fused = False
     if use_pallas and problem.n_s > 0:
         if interpret is None:
             interpret = jax.default_backend() == "cpu"
-        rids, sids, spec = _scatter_plan(problem, block_n, chunk_e, interpret)
-    else:
-        rids, sids, spec = dummy, dummy, None
+        if plan is not None:
+            plan_a, plan_b, spec = plan
+            fused = True
+        else:
+            plan_bytes = 4 * problem.n_s * problem.n_sub ** 2
+            if fused_kernel is None:
+                fused_kernel = plan_bytes <= MEGAKERNEL_PLAN_BUDGET_BYTES
+            if fused_kernel:
+                plan_a, plan_b, spec = _round_plan(problem, block_n,
+                                                   chunk_e, interpret)
+                fused = True
+            else:
+                plan_a, plan_b, spec = _scatter_plan(problem, block_n,
+                                                     chunk_e, interpret)
     if peeled0 is None:
         peeled0 = jnp.zeros((problem.deg0.shape[0],), bool)
-    return _dense_engine(problem.inc_rid, problem.deg0, rids, sids, peeled0,
-                         schedule=schedule, max_rounds=max_rounds, spec=spec,
-                         hierarchy=hierarchy)
+    return _dense_engine(problem.inc_rid, problem.deg0, plan_a, plan_b,
+                         peeled0, schedule=schedule, max_rounds=max_rounds,
+                         spec=spec, hierarchy=hierarchy, fused=fused)

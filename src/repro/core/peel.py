@@ -31,8 +31,9 @@ import numpy as np
 import jax.numpy as jnp
 
 from ..graph import INT
-from .engine import BIG, dense_coreness, make_schedule
+from .engine import BIG, dense_coreness, make_schedule, pallas_by_default
 from .incidence import NucleusProblem
+from .kcore import kcore_coreness
 from .schedule import PeelSchedule
 
 
@@ -112,8 +113,29 @@ def _peel_loop(problem: NucleusProblem, schedule: PeelSchedule) -> PeelResult:
 
 def _run(problem: NucleusProblem, schedule: PeelSchedule,
          backend: Literal["gather", "dense"],
-         use_pallas: Optional[bool], hierarchy: bool = False) -> PeelResult:
+         use_pallas: Optional[bool], hierarchy: bool = False,
+         fast_lane: Optional[bool] = None) -> PeelResult:
     if backend == "dense":
+        # the r1s2 degenerate case routes to the k-core fast lane (vertex
+        # peel + one-shot edge-list fixpoint, ``core.kcore``) unless the
+        # caller pins the Pallas megakernel — the lane the dense backend
+        # declares as "kcore" and the planner records in Plan.reasons.
+        # fast_lane=True/False forces the routing (tests compare lanes).
+        if fast_lane is None:
+            wants_pallas = use_pallas or (use_pallas is None
+                                          and pallas_by_default())
+            fast_lane = (problem.r, problem.s) == (1, 2) \
+                and not wants_pallas
+        if fast_lane:
+            out = kcore_coreness(problem, schedule, hierarchy=hierarchy)
+            if hierarchy:
+                core, order, rounds, parent, L = out
+                return PeelResult(core=core, rounds=int(rounds),
+                                  order_round=order, uf_parent=parent,
+                                  uf_L=L)
+            core, order, rounds = out
+            return PeelResult(core=core, rounds=int(rounds),
+                              order_round=order)
         if hierarchy:
             core, order, rounds, parent, L = dense_coreness(
                 problem, schedule, use_pallas=use_pallas, hierarchy=True)
@@ -139,17 +161,20 @@ def _run(problem: NucleusProblem, schedule: PeelSchedule,
 def exact_coreness(problem: NucleusProblem,
                    backend: Literal["gather", "dense"] = "gather",
                    use_pallas: Optional[bool] = None,
-                   hierarchy: bool = False) -> PeelResult:
+                   hierarchy: bool = False,
+                   fast_lane: Optional[bool] = None) -> PeelResult:
     """Exact core numbers; hierarchy=True also returns the ANH-EL join
-    forest (fused into the same jitted call on the dense backend)."""
+    forest (fused into the same jitted call on the dense backend).
+    fast_lane forces the r1s2 k-core lane on/off (None = auto)."""
     return _run(problem, make_schedule(problem, "exact"), backend,
-                use_pallas, hierarchy)
+                use_pallas, hierarchy, fast_lane)
 
 
 def approx_coreness(problem: NucleusProblem, delta: float = 0.1,
                     backend: Literal["gather", "dense"] = "gather",
                     use_pallas: Optional[bool] = None,
-                    hierarchy: bool = False) -> PeelResult:
+                    hierarchy: bool = False,
+                    fast_lane: Optional[bool] = None) -> PeelResult:
     """(C(s,r)+eps)-approximate core numbers, eps = (C+delta)(1+delta)/C - C.
 
     Estimates are >= the true core and <= (C(s,r)+delta)(1+delta) * true core
@@ -160,7 +185,7 @@ def approx_coreness(problem: NucleusProblem, delta: float = 0.1,
     likewise built over the unclipped values).
     """
     res = _run(problem, make_schedule(problem, "approx", delta), backend,
-               use_pallas, hierarchy)
+               use_pallas, hierarchy, fast_lane)
     # practical improvement: estimate <= original degree
     core = jnp.minimum(res.core, problem.deg0)
     # still must be >= true core; deg0 >= true core always, so safe.

@@ -26,9 +26,13 @@ of similar graphs pays the dominant cost — compilation — over and over.
     recompiling; ``Session.stats`` records the bucket hit pattern, and the
     ``session`` bench lane + EXPERIMENTS.md record the cold/warm speedup.
 
-Configs that resolve to a non-dense backend — or that pin or (on TPU)
-default to the Pallas scatter, whose CSR plan is per-problem — fall back
-to the planned cold path (same ``Plan`` provenance, counted in
+Pallas configs ride the warm path too: the round-megakernel plan is
+padded to the same pow2 buckets (edge axis bucketed at floor ``chunk_e``,
+chunk-span bound pow2-rounded), so ``use_pallas=True`` — or a profile
+that defaults it on — reuses one executable per shape class instead of
+recompiling per problem.  Configs that resolve to a non-dense backend, or
+whose megakernel plan would exceed its memory budget, fall back to the
+planned cold path (same ``Plan`` provenance, counted in
 ``stats["fallback"]``): correct, just not bucket-warmed; the sharded
 backend has its own same-shape warm cache
 (``distributed._jitted_decomposition``).
@@ -43,9 +47,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph import INT
+from ..kernels.segment_sum import DEFAULT_BLOCK_N, DEFAULT_CHUNK_E
 from .api import (Decomposition, NucleusConfig, execute_plan, plan_config,
                   resolve_problem)
-from .engine import dense_coreness, pallas_by_default
+from .engine import (MEGAKERNEL_PLAN_BUDGET_BYTES, ScatterSpec, _round_plan,
+                     dense_coreness, pallas_by_default)
 from .incidence import NucleusProblem
 from .schedule import PeelSchedule
 
@@ -100,10 +106,14 @@ class _Bucket:
     n_r_pad: int
     n_s_pad: int
     schedule: PeelSchedule
+    # the Pallas megakernel tiling this bucket compiles with (None = pure
+    # XLA round body); the plan arrays are padded to the same pow2 buckets
+    # (edge axis included) so warm members reuse the executable
+    pallas: Optional[ScatterSpec] = None
 
     def astuple(self) -> Tuple:
         return (self.method, self.r, self.s, self.fused, self.n_r_pad,
-                self.n_s_pad, self.schedule)
+                self.n_s_pad, self.schedule, self.pallas)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -154,16 +164,20 @@ class Session:
         problem, config = resolve_problem(graph_or_problem, self.config)
         config, plan = plan_config(problem, config)
         self.stats["decompositions"] += 1
-        # the padded path covers the compiled dense engine's XLA scatter;
-        # the Pallas scatter plan is per-problem (CSR edge arrays), so any
-        # config that pins it — or defaults to it on TPU — takes the cold
-        # path (results identical either way, and the fallback is counted)
-        wants_pallas = config.use_pallas or (
-            config.use_pallas is None and pallas_by_default())
-        if config.backend != "dense" or wants_pallas or problem.n_r == 0:
+        # the padded path covers the compiled dense engine, XLA round body
+        # AND Pallas megakernel: the megakernel plan is padded to the same
+        # pow2 buckets (edge axis included), so use_pallas rides the warm
+        # path too.  Only a plan that would blow the megakernel's memory
+        # budget still takes the cold path (scatter-only fallback there).
+        wants_pallas = bool(config.use_pallas or (
+            config.use_pallas is None and pallas_by_default()))
+        plan_bytes = 4 * problem.n_s * problem.n_sub ** 2
+        if config.backend != "dense" or problem.n_r == 0 or (
+                wants_pallas and plan_bytes > MEGAKERNEL_PLAN_BUDGET_BYTES):
             self.stats["fallback"] += 1
             return execute_plan(problem, config, plan)
-        return self._decompose_padded(problem, config, plan)
+        return self._decompose_padded(problem, config, plan,
+                                      wants_pallas=wants_pallas)
 
     def decompose_many(self, graphs) -> List[Decomposition]:
         """Decompose a stream; same-bucket members after the first are
@@ -171,18 +185,41 @@ class Session:
         return [self.decompose(g) for g in graphs]
 
     # -- the padded dense path ---------------------------------------------
-    def _bucket(self, problem: NucleusProblem,
-                config: NucleusConfig) -> "_Bucket":
+    def _bucket(self, problem: NucleusProblem, config: NucleusConfig, *,
+                wants_pallas: Optional[bool] = None) -> "_Bucket":
         """The shape class ``problem`` lands in under ``config``: the
         canonical schedule plus padded shapes (everything the compiled
         executable depends on), computed once and named."""
+        if wants_pallas is None:
+            wants_pallas = bool(config.use_pallas or (
+                config.use_pallas is None and pallas_by_default()))
+        n_r_pad = bucket_size(problem.n_r, self.bucket_floor)
+        pallas_spec = None
+        if wants_pallas and problem.n_s > 0:
+            _ids, _members, pallas_spec = self._pallas_plan(problem, n_r_pad)
         return _Bucket(
             method=config.method, r=config.r, s=config.s,
             fused=config.hierarchy == "fused",
-            n_r_pad=bucket_size(problem.n_r, self.bucket_floor),
+            n_r_pad=n_r_pad,
             n_s_pad=bucket_size(problem.n_s, self.bucket_floor),
             schedule=canonical_schedule(config.method, problem.n_sub,
-                                        config.delta, problem.g.n))
+                                        config.delta, problem.g.n),
+            pallas=pallas_spec)
+
+    def _pallas_plan(self, problem: NucleusProblem, n_r_pad: int):
+        """The bucketed megakernel plan: CSR edge arrays padded to pow2
+        shape classes (edge count included, floor ``chunk_e``) with a
+        pow2-rounded chunk-span bound, so the ScatterSpec — part of the
+        executable's jit key — repeats across same-bucket problems."""
+        import jax
+        block_n, chunk_e = DEFAULT_BLOCK_N, DEFAULT_CHUNK_E
+        e_real = int(problem.mem_sids.shape[0])
+        e_pad = bucket_size(e_real, chunk_e)
+        n_seg_pad = max(n_r_pad, block_n)
+        return _round_plan(problem, block_n, chunk_e,
+                           jax.default_backend() == "cpu",
+                           e_pad=e_pad, n_r_pad=n_seg_pad,
+                           pow2_chunks=True)
 
     def bucket_key(self, problem: NucleusProblem,
                    config: Optional[NucleusConfig] = None) -> Tuple:
@@ -191,10 +228,11 @@ class Session:
         return tuple(self._bucket(problem, config or self.config).astuple())
 
     def _decompose_padded(self, problem: NucleusProblem,
-                          config: NucleusConfig, plan) -> Decomposition:
+                          config: NucleusConfig, plan, *,
+                          wants_pallas: bool = False) -> Decomposition:
         fused = config.hierarchy == "fused"
         n_r, n_s, C = problem.n_r, problem.n_s, problem.n_sub
-        bucket = self._bucket(problem, config)
+        bucket = self._bucket(problem, config, wants_pallas=wants_pallas)
         key = tuple(bucket.astuple())
         sched = bucket.schedule
         n_r_pad, n_s_pad = bucket.n_r_pad, bucket.n_s_pad
@@ -210,9 +248,14 @@ class Session:
             [jnp.zeros((n_r,), bool), jnp.ones((n_r_pad - n_r,), bool)])
         padded = _PaddedProblem(inc_rid=inc, deg0=deg0, n_r=n_r_pad,
                                 n_s=n_s_pad)
-        out = dense_coreness(padded, sched, use_pallas=False,
+        kernel_plan = None
+        if bucket.pallas is not None:
+            # memoized on the problem — the same arrays _bucket built
+            kernel_plan = self._pallas_plan(problem, n_r_pad)
+        out = dense_coreness(padded, sched,
+                             use_pallas=kernel_plan is not None,
                              max_rounds=n_r_pad + 2, hierarchy=fused,
-                             peeled0=peeled0)
+                             peeled0=peeled0, plan=kernel_plan)
         core_raw = np.asarray(out[0])[:n_r]
         order_round = np.asarray(out[1])[:n_r]
         rounds = int(out[2])

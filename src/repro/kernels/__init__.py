@@ -4,6 +4,8 @@
                     loop on the MXU
   flash_attention — online-softmax attention (LM prefill/serve hot spot)
   segment_sum     — sorted-segment one-hot-matmul reduction (GNN / recsys)
+  peel_round      — fused peel-round megakernel (select + dead-s-clique
+                    gather + segment decrement in one launch)
 
 Each kernel ships ops.py (jitted wrapper) + ref.py (pure-jnp oracle); tests
 sweep shapes/dtypes in interpret mode on CPU.

@@ -1,0 +1,232 @@
+"""Pallas TPU megakernel: one fused peel round over the CSR incidence plan.
+
+The dense engine's round body is a chain of ~6 separate XLA ops —
+threshold-select (bucket extraction), the dead-s-clique membership gather,
+and the sorted-segment decrement — each streaming the O(E = n_s * C)
+incidence once.  This kernel fuses the whole chain into a single launch
+over the rid-sorted CSR edge array, reusing ``segment_sum``'s
+band-structured grid: output block i of r-clique state only visits the
+input chunks whose rid range can intersect it (scalar-prefetched
+``chunk0``/``nchunks``), and the per-edge dead test feeds the one-hot MXU
+contraction directly instead of materializing ``dead_now`` in HBM.
+
+The fusion is legal because every per-edge quantity is a pure function of
+the PREVIOUS round's state plus the round's peel level:
+
+    new_peeled[r]  = old_peeled[r] | (deg[r] <= level)         (select)
+    s_alive[s]     = ~OR_c old_peeled[members[s, c]]           (derived!)
+    dead_now[s]    = s_alive[s] & OR_c new_peeled[members[s, c]]
+    delta[r]       = #{edges (r, s) : dead_now[s]}             (decrement)
+
+``s_alive`` does not need to be carried at all — an s-clique is alive iff
+no member peeled in an earlier round, which the (monotone) ``old_peeled``
+already encodes — so the kernel reads only (deg, peeled) and writes the
+full post-round (deg, peeled, core, order) in one pass, with separate
+in/out refs (the sequential TPU grid never sees a read-after-write
+hazard).  The minimum-degree reduction and the schedule advance stay
+outside (O(n_r) jnp ops inside the while_loop body).
+
+Plan arrays (static per problem, built once by ``peel_round_plan``):
+``ids[k]`` = the r-clique of CSR edge k (ascending), ``members[k, :]`` =
+the full member row of edge k's s-clique (so the dead test needs no
+second indirection).  Padding edges carry ``ids = n_r_pad`` (outside every
+output block) and ``members = -1`` (treated as already-peeled, so their
+dead test is always False).  ``kernels.ref.peel_round_ref`` is the jnp
+oracle twin; interpret mode is the CPU fallback (correctness oracle, not a
+fast path).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .segment_sum import DEFAULT_BLOCK_N, DEFAULT_CHUNK_E
+
+
+def peel_round_plan(rids: np.ndarray, members: np.ndarray, n_r: int,
+                    block_n: int = DEFAULT_BLOCK_N,
+                    chunk_e: int = DEFAULT_CHUNK_E,
+                    e_pad: int | None = None,
+                    n_r_pad: int | None = None,
+                    max_chunks: int | None = None):
+    """Pad the concrete CSR plan so ``fused_peel_round`` jits.
+
+    rids: (E,) int32 ascending r-clique id per CSR edge; members: (E, C)
+    the full s-clique member row of each edge.  Returns ``(ids_padded,
+    members_padded, n_r_pad, max_chunks)``.  ``e_pad``/``n_r_pad``/
+    ``max_chunks`` override the minimal pads — the Session passes its pow2
+    bucket shapes here so same-bucket problems share one executable.
+    Everything is eager numpy: call once at plan-build time.
+    """
+    rids = np.asarray(rids, np.int32)
+    members = np.asarray(members, np.int32)
+    E, C = members.shape
+    if n_r_pad is None:
+        n_r_pad = -(-max(n_r, 1) // block_n) * block_n
+    assert n_r_pad % block_n == 0 and n_r_pad >= n_r
+    if e_pad is None:
+        e_pad = -(-max(E, 1) // chunk_e) * chunk_e
+    assert e_pad % chunk_e == 0 and e_pad >= E
+    ids_padded = np.full(e_pad, n_r_pad, np.int32)
+    ids_padded[:E] = rids
+    members_padded = np.full((e_pad, C), -1, np.int32)
+    members_padded[:E] = members
+    # per-block chunk-span bound: same intersection logic the wrapper
+    # replays with jnp searchsorted at trace time
+    bounds_lo = np.arange(n_r_pad // block_n, dtype=np.int64) * block_n
+    chunk_first = ids_padded[::chunk_e]
+    chunk_last = ids_padded[chunk_e - 1::chunk_e]
+    c0 = np.searchsorted(chunk_last, bounds_lo, side="left")
+    c1 = np.searchsorted(chunk_first, bounds_lo + block_n, side="left")
+    need = max(int(np.max(np.maximum(c1 - c0, 0), initial=0)), 1)
+    if max_chunks is None:
+        max_chunks = need
+    assert max_chunks >= need
+    return ids_padded, members_padded, n_r_pad, max_chunks
+
+
+def _round_kernel(chunk0_ref, nchunks_ref, params_ref, ids_ref, mem_ref,
+                  deg_ref, peeled_ref, core_ref, order_ref,
+                  deg_out, peeled_out, core_out, order_out, acc_ref, *,
+                  block_n: int, chunk_e: int, max_chunks: int, n_r_pad: int):
+    i = pl.program_id(0)   # output block of r-clique state
+    j = pl.program_id(1)   # chunk-within-block
+    level = params_ref[0]
+    rnd = params_ref[1]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(j < nchunks_ref[i])
+    def _body():
+        ids = ids_ref[0, :]                       # (chunk_e,) int32
+        mem = mem_ref[...]                        # (chunk_e, C) int32
+        deg = deg_ref[0, :]                       # (n_r_pad,) int32
+        peeled = peeled_ref[0, :]                 # (n_r_pad,) int32 0/1
+        memc = jnp.clip(mem, 0, n_r_pad - 1)
+        # member state BEFORE this round; pad members (-1) read as peeled
+        was = (peeled[memc] > 0) | (mem < 0)      # (chunk_e, C)
+        gone = was | (deg[memc] <= level)         # == new_peeled[member]
+        # s-clique alive (no member peeled before) AND dying now
+        dead = (~jnp.any(was, axis=1)) & jnp.any(gone, axis=1)
+        rows = i * block_n + jax.lax.broadcasted_iota(
+            jnp.int32, (block_n, chunk_e), 0)
+        onehot = (ids[None, :] == rows).astype(jnp.float32)
+        acc_ref[...] += jax.lax.dot(
+            onehot, dead.astype(jnp.float32)[:, None],
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == max_chunks - 1)
+    def _finish():
+        n0 = i * block_n
+        degb = deg_ref[0, pl.ds(n0, block_n)]
+        peeledb = peeled_ref[0, pl.ds(n0, block_n)]
+        coreb = core_ref[0, pl.ds(n0, block_n)]
+        orderb = order_ref[0, pl.ds(n0, block_n)]
+        a = (peeledb == 0) & (degb <= level)      # this round's bucket
+        newp = (peeledb > 0) | a
+        delta = acc_ref[:, 0].astype(jnp.int32)
+        # peeled cliques keep deg frozen (core already assigned)
+        deg_out[0, :] = jnp.where(newp, degb, degb - delta)
+        peeled_out[0, :] = newp.astype(jnp.int32)
+        core_out[0, :] = jnp.where(a, level, coreb)
+        order_out[0, :] = jnp.where(a, rnd, orderb)
+
+
+def fused_peel_round(ids: jnp.ndarray, members: jnp.ndarray,
+                     deg: jnp.ndarray, peeled: jnp.ndarray,
+                     core: jnp.ndarray, order: jnp.ndarray,
+                     level: jnp.ndarray, rnd: jnp.ndarray,
+                     chunk0: jnp.ndarray, nchunks: jnp.ndarray, *,
+                     block_n: int = DEFAULT_BLOCK_N,
+                     chunk_e: int = DEFAULT_CHUNK_E,
+                     max_chunks: int,
+                     interpret: bool | None = None):
+    """One fused peel round: (deg, peeled, core, order) -> same, updated.
+
+    ids: (E_pad,) int32 ascending (pad id = n_r_pad); members: (E_pad, C);
+    deg/peeled/core/order: (n_r_pad,) int32 (peeled is 0/1; pad entries
+    must come in peeled=1 so they stay inert); level/rnd: int32 scalars;
+    chunk0/nchunks: (n_r_pad // block_n,) per-block chunk windows (from
+    ``chunk_windows``).  Shapes must satisfy E_pad % chunk_e == 0 and
+    n_r_pad % block_n == 0 (use ``peel_round_plan``).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    E_pad = ids.shape[0]
+    n_r_pad = deg.shape[0]
+    assert E_pad % chunk_e == 0 and n_r_pad % block_n == 0
+    n_blocks = n_r_pad // block_n
+    n_chunks_total = E_pad // chunk_e
+    params = jnp.stack([jnp.asarray(level, jnp.int32),
+                        jnp.asarray(rnd, jnp.int32)])
+    ids2d = ids.reshape(1, E_pad)
+    mem = members
+    state2d = [x.reshape(1, n_r_pad) for x in (deg, peeled, core, order)]
+
+    def ids_map(i, j, chunk0_ref, nchunks_ref, params_ref):
+        k = chunk0_ref[i] + jnp.minimum(j, nchunks_ref[i] - 1)
+        k = jnp.clip(k, 0, n_chunks_total - 1)
+        return (0, k)
+
+    def mem_map(i, j, chunk0_ref, nchunks_ref, params_ref):
+        k = chunk0_ref[i] + jnp.minimum(j, nchunks_ref[i] - 1)
+        k = jnp.clip(k, 0, n_chunks_total - 1)
+        return (k, 0)
+
+    def full_map(i, j, chunk0_ref, nchunks_ref, params_ref):
+        return (0, 0)
+
+    def out_map(i, j, chunk0_ref, nchunks_ref, params_ref):
+        return (0, i)
+
+    C = members.shape[1]
+    out_shape = [jax.ShapeDtypeStruct((1, n_r_pad), jnp.int32)] * 4
+    outs = pl.pallas_call(
+        partial(_round_kernel, block_n=block_n, chunk_e=chunk_e,
+                max_chunks=max_chunks, n_r_pad=n_r_pad),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(n_blocks, max_chunks),
+            in_specs=[
+                pl.BlockSpec((1, chunk_e), ids_map),
+                pl.BlockSpec((chunk_e, C), mem_map),
+                pl.BlockSpec((1, n_r_pad), full_map),
+                pl.BlockSpec((1, n_r_pad), full_map),
+                pl.BlockSpec((1, n_r_pad), full_map),
+                pl.BlockSpec((1, n_r_pad), full_map),
+            ],
+            out_specs=[pl.BlockSpec((1, block_n), out_map)] * 4,
+            scratch_shapes=[pltpu.VMEM((block_n, 1), jnp.float32)],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(chunk0, nchunks, params, ids2d, mem, *state2d)
+    return tuple(o.reshape(n_r_pad) for o in outs)
+
+
+def chunk_windows(ids: jnp.ndarray, n_r_pad: int, block_n: int,
+                  chunk_e: int, max_chunks: int):
+    """(chunk0, nchunks) per output block — the scalar-prefetch windows.
+
+    jnp searchsorted over the chunk boundary ids (loop-invariant: compute
+    once outside the peel while_loop and close over the result).
+    """
+    E_pad = ids.shape[0]
+    n_blocks = n_r_pad // block_n
+    n_chunks_total = E_pad // chunk_e
+    bounds_lo = jnp.arange(n_blocks, dtype=jnp.int32) * block_n
+    chunk_first = ids[::chunk_e]
+    chunk_last = ids[chunk_e - 1::chunk_e]
+    c0 = jnp.searchsorted(chunk_last, bounds_lo, side="left")
+    c1 = jnp.searchsorted(chunk_first, bounds_lo + block_n, side="left")
+    nchunks = jnp.minimum(jnp.maximum(c1 - c0, 0),
+                          max_chunks).astype(jnp.int32)
+    c0 = jnp.minimum(c0, n_chunks_total - 1).astype(jnp.int32)
+    return c0, nchunks

@@ -37,3 +37,26 @@ def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 def segment_sum_ref(data: jnp.ndarray, ids: jnp.ndarray,
                     n_segments: int) -> jnp.ndarray:
     return jax.ops.segment_sum(data, ids, n_segments)
+
+
+def peel_round_ref(ids: jnp.ndarray, members: jnp.ndarray, deg: jnp.ndarray,
+                   peeled: jnp.ndarray, core: jnp.ndarray,
+                   order: jnp.ndarray, level, rnd):
+    """Oracle twin of ``peel_round.fused_peel_round``: one peel round over
+    the per-edge CSR plan, pure jnp.  Same contract: ids (E_pad,) with pad
+    id = n_r_pad, members (E_pad, C) with pad member = -1 (read as already
+    peeled), deg/peeled/core/order (n_r_pad,) int32 (peeled 0/1)."""
+    n_r_pad = deg.shape[0]
+    memc = jnp.clip(members, 0, n_r_pad - 1)
+    was = (peeled[memc] > 0) | (members < 0)
+    gone = was | (deg[memc] <= level)
+    dead = (~jnp.any(was, axis=1)) & jnp.any(gone, axis=1)
+    # pad edges carry id = n_r_pad: give the scatter one spill row
+    delta = jnp.zeros((n_r_pad + 1,), jnp.int32).at[ids].add(
+        dead.astype(jnp.int32))[:n_r_pad]
+    a = (peeled == 0) & (deg <= level)
+    newp = (peeled > 0) | a
+    deg = jnp.where(newp, deg, deg - delta)
+    return (deg, newp.astype(jnp.int32),
+            jnp.where(a, level, core).astype(jnp.int32),
+            jnp.where(a, rnd, order).astype(jnp.int32))

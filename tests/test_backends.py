@@ -203,9 +203,12 @@ def test_conformance_every_legal_triple(problem, method, backend, hierarchy):
 # ---------------------------------------------------------------------------
 
 def _plan(cfg, *, n_r=1000, n_s=1000, n_sub=3, device_kind="cpu",
-          n_devices=1):
+          n_devices=1, profile_path="/nonexistent/planner_profile.json"):
+    # profile_path defaults to a missing file so the decision-rule tests
+    # exercise the static constants regardless of the committed profile
     return B.resolve_plan(cfg, n_r=n_r, n_s=n_s, n_sub=n_sub,
-                          device_kind=device_kind, n_devices=n_devices)
+                          device_kind=device_kind, n_devices=n_devices,
+                          profile_path=profile_path)
 
 
 def test_planner_explicit_backend_is_kept():
@@ -285,6 +288,136 @@ def test_plan_report_is_human_readable():
     rep = p.report()
     assert "backend='dense'" in rep and "requested backend='auto'" in rep
     assert any(line.startswith("  - ") for line in rep.splitlines())
+
+
+# ---------------------------------------------------------------------------
+# Telemetry-driven thresholds (planner_profile.json -> resolve_plan)
+# ---------------------------------------------------------------------------
+
+from repro.core import planner_profile as PP  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _fresh_profile_cache():
+    PP.reset_cache()
+    yield
+    PP.reset_cache()
+
+
+def _write_profile(tmp_path, profiles, name="prof.json"):
+    path = tmp_path / name
+    path.write_text(json.dumps({"format": PP.FORMAT, "version": PP.VERSION,
+                                "profiles": profiles}))
+    return str(path)
+
+
+def test_profile_thresholds_drive_the_planner(tmp_path):
+    """A measured tiny_nr crossover replaces the static constant, and the
+    Plan reasons say which profile entry fired."""
+    path = _write_profile(tmp_path, {"cpu": {"tiny_nr": 200}})
+    cfg = NucleusConfig(backend="auto", hierarchy="auto")
+    small = _plan(cfg, n_r=150, profile_path=path)
+    assert small.backend == "gather"       # 150 < measured 200
+    assert any("planner_profile['cpu']" in r for r in small.reasons)
+    big = _plan(cfg, n_r=250, profile_path=path)
+    assert big.backend == "dense"
+    # the static constant would have said dense for n_r=150
+    assert _plan(cfg, n_r=150).backend == "dense"
+
+
+def test_profile_device_kind_beats_platform(tmp_path):
+    path = _write_profile(tmp_path, {
+        "TPU v4": {"tiny_nr": 10}, "tpu": {"tiny_nr": 99}})
+    entry, source = PP.profile_entry(device_kind="TPU v4", platform="tpu",
+                                     path=path)
+    assert entry["tiny_nr"] == 10 and "TPU v4" in source
+
+
+def test_profile_per_key_fallback(tmp_path):
+    """An entry that measured only one crossover keeps the static value
+    for the other (shard_min_incidence is unmeasured on 1 device)."""
+    path = _write_profile(tmp_path, {"cpu": {"tiny_nr": 33}})
+    th = PP.thresholds(device_kind="cpu", path=path)
+    assert th["tiny_nr"] == 33
+    assert th["shard_min_incidence"] == PP.STATIC_SHARD_MIN_INCIDENCE
+
+
+def test_profile_missing_is_silent_static(tmp_path):
+    th = PP.thresholds(device_kind="cpu",
+                       path=str(tmp_path / "never_written.json"))
+    assert th["tiny_nr"] == PP.STATIC_TINY_NR
+    assert th["source"] == "static defaults"
+
+
+def test_profile_malformed_warns_once_then_static(tmp_path):
+    path = tmp_path / "bad.json"
+    path.write_text("{not json")
+    with pytest.warns(UserWarning, match="falling back to the static"):
+        th = PP.thresholds(device_kind="cpu", path=str(path))
+    assert th["tiny_nr"] == PP.STATIC_TINY_NR
+    import warnings as W
+    with W.catch_warnings():
+        W.simplefilter("error")        # second load must NOT warn again
+        th2 = PP.thresholds(device_kind="cpu", path=str(path))
+    assert th2["source"] == "static defaults"
+    # a wrong format sentinel is malformed too
+    path2 = tmp_path / "wrong_format.json"
+    path2.write_text(json.dumps({"format": "something-else", "profiles": {}}))
+    with pytest.warns(UserWarning, match="falling back to the static"):
+        assert PP.load_profile(str(path2)) is None
+
+
+def test_pallas_default_from_profile(tmp_path):
+    path = _write_profile(tmp_path, {"cpu": {"pallas_default": True},
+                                     "tpu": {"tiny_nr": 5}})
+    assert PP.pallas_default(platform="cpu", path=path) is True
+    # entry exists but never measured the kernel race -> None + warn
+    with pytest.warns(UserWarning, match="calibrate_planner"):
+        assert PP.pallas_default(platform="tpu", path=path) is None
+    with pytest.warns(UserWarning, match="calibrate_planner"):
+        assert PP.pallas_default(platform="rocm", path=path) is None
+
+
+def test_pallas_by_default_consults_the_profile(tmp_path, monkeypatch):
+    """engine.pallas_by_default (the use_pallas=None oracle) follows the
+    profile verdict when one covers this platform."""
+    from repro.core import engine as engine_mod
+    path = _write_profile(tmp_path, {
+        "cpu": {"pallas_default": True}, "tpu": {"pallas_default": True}})
+    monkeypatch.setattr(PP, "PROFILE_PATH", path)
+    assert engine_mod.pallas_by_default() is True
+    PP.reset_cache()
+    path2 = _write_profile(tmp_path, {
+        "cpu": {"pallas_default": False}, "tpu": {"pallas_default": False}},
+        name="prof2.json")
+    monkeypatch.setattr(PP, "PROFILE_PATH", path2)
+    assert engine_mod.pallas_by_default() is False
+
+
+def test_planner_records_kcore_fast_lane():
+    p = _plan(NucleusConfig(backend="auto", hierarchy="auto"))
+    assert not any("kcore" in r for r in p.reasons)   # r/s unknown
+    p12 = B.resolve_plan(NucleusConfig(backend="auto", hierarchy="auto"),
+                         n_r=1000, n_s=1000, n_sub=2, device_kind="cpu",
+                         n_devices=1, r=1, s=2,
+                         profile_path="/nonexistent/planner_profile.json")
+    assert any("fast lane 'kcore'" in r for r in p12.reasons)
+    p23 = B.resolve_plan(NucleusConfig(backend="auto", hierarchy="auto"),
+                         n_r=1000, n_s=1000, n_sub=3, device_kind="cpu",
+                         n_devices=1, r=2, s=3,
+                         profile_path="/nonexistent/planner_profile.json")
+    assert not any("kcore" in r for r in p23.reasons)
+
+
+def test_committed_profile_is_loadable():
+    """The shipped src/repro/core/planner_profile.json parses and covers
+    the reference platform (cpu)."""
+    blob = PP.load_profile()
+    assert blob is not None, "committed planner_profile.json missing/bad"
+    assert "cpu" in blob["profiles"]
+    th = PP.thresholds(device_kind="cpu")
+    assert "planner_profile" in th["source"]
+    assert th["tiny_nr"] >= 1
 
 
 # ---------------------------------------------------------------------------

@@ -178,3 +178,97 @@ def test_engine_empty_problem():
     res = exact_coreness(p, backend="dense")
     np.testing.assert_array_equal(np.asarray(res.core),
                                   np.zeros(p.n_r, np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Round megakernel (use_pallas=True now runs the fused round, not just the
+# scatter): full-peel bit-identity incl. the fused hierarchy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["exact", "approx"])
+@pytest.mark.parametrize("gname,r,s", problems())
+def test_megakernel_full_peel_bit_identical(gname, r, s, mode):
+    """The fused round megakernel must reproduce the multi-op XLA round
+    body bit-for-bit across the whole peel — cores, trace, rounds AND the
+    fused LINK forest (the forest consumes the per-round a_mask, so it
+    would catch a divergence the final cores might mask)."""
+    p = build_problem(GRAPHS[gname], r, s)
+    if p.n_r == 0:
+        pytest.skip("no r-cliques")
+    peel = (exact_coreness if mode == "exact"
+            else lambda q, **kw: approx_coreness(q, delta=0.1, **kw))
+    ref = peel(p, backend="dense", use_pallas=False, hierarchy=True,
+               fast_lane=False)
+    mk = peel(p, backend="dense", use_pallas=True, hierarchy=True,
+              fast_lane=False)
+    for f in ("core", "order_round", "uf_parent", "uf_L"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref, f)),
+                                      np.asarray(getattr(mk, f)),
+                                      err_msg=f)
+    assert ref.rounds == mk.rounds
+
+
+# ---------------------------------------------------------------------------
+# k-core fast lane (r1s2): bit-identity against the generic engine
+# ---------------------------------------------------------------------------
+
+KCORE_GRAPHS = list(GRAPHS) + ["er80"]
+GRAPHS["er80"] = generators.erdos_renyi(80, 0.1, seed=9)
+
+
+@pytest.mark.parametrize("mode", ["exact", "approx"])
+@pytest.mark.parametrize("gname", KCORE_GRAPHS)
+def test_kcore_lane_bit_identical(gname, mode):
+    """The r1s2 vertex-degree lane (one-shot edge-list fixpoint) must be
+    bit-identical to the generic incidence engine: same cores, same trace,
+    same rounds, same resolved forest."""
+    p = build_problem(GRAPHS[gname], 1, 2)
+    peel = (exact_coreness if mode == "exact"
+            else lambda q, **kw: approx_coreness(q, delta=0.1, **kw))
+    ref = peel(p, backend="dense", use_pallas=False, hierarchy=True,
+               fast_lane=False)
+    kc = peel(p, backend="dense", hierarchy=True, fast_lane=True)
+    for f in ("core", "order_round", "uf_parent", "uf_L"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref, f)),
+                                      np.asarray(getattr(kc, f)),
+                                      err_msg=f)
+    assert ref.rounds == kc.rounds
+
+
+def test_kcore_lane_is_the_r1s2_default():
+    """peel._run routes (1,2) dense peels to the k-core lane unless the
+    caller pins the Pallas megakernel."""
+    from repro.core import peel as peel_mod
+    calls = []
+    orig = peel_mod.kcore_coreness
+
+    def spy(problem, schedule, **kw):
+        calls.append(kw)
+        return orig(problem, schedule, **kw)
+
+    p = build_problem(GRAPHS["er30"], 1, 2)
+    try:
+        peel_mod.kcore_coreness = spy
+        exact_coreness(p, backend="dense")
+        assert len(calls) == 1          # default: lane taken
+        exact_coreness(p, backend="dense", use_pallas=True)
+        assert len(calls) == 1          # pinned megakernel: lane skipped
+    finally:
+        peel_mod.kcore_coreness = orig
+
+
+def test_kcore_lane_matches_replay_oracle():
+    """The one-shot edge-list fixpoint forest == host trace replay (the
+    confluence argument, end-to-end)."""
+    p = build_problem(GRAPHS["ba60"], 1, 2)
+    res = exact_coreness(p, backend="dense", hierarchy=True, fast_lane=True)
+    state = replay_trace(p, res)
+    ref_parent = _resolve(state.parent, np.arange(p.n_r, dtype=np.int64))
+    np.testing.assert_array_equal(
+        np.asarray(res.uf_parent).astype(np.int64), ref_parent)
+    t_fused = construct_tree_efficient(p, link_state_from_forest(
+        res.peel_value, res.uf_parent, res.uf_L))
+    t_replay = construct_tree_efficient(p, state)
+    pairs = _sample_pairs(p.n_r, seed=17)
+    np.testing.assert_array_equal(t_fused.join_levels(pairs),
+                                  t_replay.join_levels(pairs))

@@ -1,0 +1,162 @@
+"""Round-megakernel boundary suite: Pallas (interpret) vs the jnp oracle.
+
+Mirrors the tricount boundary tests: awkward edge counts around the chunk
+boundary (E = chunk_e ± 1), degenerate rounds (empty bucket, everything
+dies at once), multi-block r-clique state, and the Session's padded-plan
+overrides.  The kernel and ``ref.peel_round_ref`` are both pure functions
+of (plan, state, level, rnd), so parity needs no graph semantics — any
+consistent random state exercises them — but the full-peel test drives a
+real multi-round trajectory to completion anyway (levels from the live
+minimum, the way the engine's schedule does).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.peel_round import (chunk_windows, fused_peel_round,
+                                      peel_round_plan)
+
+
+def _random_plan(rng, n_r, E, C, block_n, chunk_e, **overrides):
+    rids = np.sort(rng.integers(0, n_r, E)).astype(np.int32)
+    members = rng.integers(0, n_r, (E, C)).astype(np.int32)
+    ids_p, mem_p, n_r_pad, max_chunks = peel_round_plan(
+        rids, members, n_r, block_n=block_n, chunk_e=chunk_e, **overrides)
+    return jnp.asarray(ids_p), jnp.asarray(mem_p), n_r_pad, max_chunks
+
+
+def _random_state(rng, n_r, n_r_pad, max_deg=12):
+    """Padded (deg, peeled, core, order); pad rows peeled (inert)."""
+    deg = np.zeros(n_r_pad, np.int32)
+    deg[:n_r] = rng.integers(0, max_deg, n_r)
+    peeled = np.ones(n_r_pad, np.int32)
+    peeled[:n_r] = rng.integers(0, 2, n_r)
+    core = np.full(n_r_pad, -1, np.int32)
+    order = np.full(n_r_pad, -1, np.int32)
+    return tuple(jnp.asarray(x) for x in (deg, peeled, core, order))
+
+
+def _run_both(plan, state, level, rnd, block_n, chunk_e):
+    ids, mem, n_r_pad, max_chunks = plan
+    c0, nch = chunk_windows(ids, n_r_pad, block_n, chunk_e, max_chunks)
+    got = fused_peel_round(ids, mem, *state, jnp.int32(level),
+                           jnp.int32(rnd), c0, nch, block_n=block_n,
+                           chunk_e=chunk_e, max_chunks=max_chunks,
+                           interpret=True)
+    want = ref.peel_round_ref(ids, mem, *state, jnp.int32(level),
+                              jnp.int32(rnd))
+    return got, want
+
+
+def _assert_rounds_equal(got, want):
+    for g, w, name in zip(got, want, ("deg", "peeled", "core", "order")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+
+
+@pytest.mark.parametrize("E", [63, 64, 65, 127, 128, 129, 1])
+def test_peel_round_chunk_boundaries(E):
+    """E = chunk_e ± 1 (and a single edge): the pad edges must stay inert."""
+    rng = np.random.default_rng(E)
+    block_n, chunk_e = 32, 64
+    plan = _random_plan(rng, 50, E, 3, block_n, chunk_e)
+    state = _random_state(rng, 50, plan[2])
+    for level in (0, 3, 7):
+        got, want = _run_both(plan, state, level, 2, block_n, chunk_e)
+        _assert_rounds_equal(got, want)
+
+
+@pytest.mark.parametrize("n_r", [31, 32, 33, 65, 96])
+def test_peel_round_block_boundaries(n_r):
+    """n_r = block_n ± 1 and multi-block state."""
+    rng = np.random.default_rng(n_r + 100)
+    block_n, chunk_e = 32, 64
+    plan = _random_plan(rng, n_r, 200, 3, block_n, chunk_e)
+    state = _random_state(rng, n_r, plan[2])
+    got, want = _run_both(plan, state, 4, 1, block_n, chunk_e)
+    _assert_rounds_equal(got, want)
+
+
+def test_peel_round_empty_round_is_identity():
+    """level below every live degree: nothing peels, nothing decrements."""
+    rng = np.random.default_rng(7)
+    block_n, chunk_e = 32, 64
+    plan = _random_plan(rng, 40, 150, 3, block_n, chunk_e)
+    deg, peeled, core, order = _random_state(rng, 40, plan[2])
+    deg = jnp.maximum(deg, 1)            # live degrees all >= 1
+    state = (deg, peeled, core, order)
+    got, want = _run_both(plan, state, 0, 5, block_n, chunk_e)
+    _assert_rounds_equal(got, want)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(deg))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(peeled))
+
+
+def test_peel_round_all_dead_round():
+    """level above every degree: the whole graph peels in one round and
+    every still-alive s-clique dies."""
+    rng = np.random.default_rng(8)
+    block_n, chunk_e = 32, 64
+    plan = _random_plan(rng, 40, 150, 4, block_n, chunk_e)
+    state = _random_state(rng, 40, plan[2])
+    got, want = _run_both(plan, state, 10_000, 3, block_n, chunk_e)
+    _assert_rounds_equal(got, want)
+    assert bool(jnp.all(got[1] == 1))    # everyone peeled
+    # every row either peeled this round (core assigned) or came in peeled
+    n_r = 40
+    assert bool(jnp.all((got[2][:n_r] >= 0) | (state[1][:n_r] == 1)))
+
+
+def test_peel_round_session_pad_overrides():
+    """The Session's bucket shapes (larger e_pad / n_r_pad / max_chunks)
+    must not change the answer on the real prefix."""
+    rng = np.random.default_rng(9)
+    block_n, chunk_e = 32, 64
+    n_r, E = 45, 130
+    tight = _random_plan(rng, n_r, E, 3, block_n, chunk_e)
+    rng2 = np.random.default_rng(9)
+    loose = _random_plan(rng2, n_r, E, 3, block_n, chunk_e,
+                         e_pad=512, n_r_pad=128, max_chunks=8)
+    st_t = _random_state(np.random.default_rng(10), n_r, tight[2])
+    st_l = tuple(
+        jnp.concatenate([x[:n_r],
+                         jnp.asarray(pad_val
+                                     * np.ones(loose[2] - n_r, np.int32))])
+        for x, pad_val in zip(st_t, (0, 1, -1, -1)))
+    got_t, want_t = _run_both(tight, st_t, 5, 2, block_n, chunk_e)
+    got_l, want_l = _run_both(loose, st_l, 5, 2, block_n, chunk_e)
+    _assert_rounds_equal(got_t, want_t)
+    _assert_rounds_equal(got_l, want_l)
+    for a, b in zip(got_t, got_l):
+        np.testing.assert_array_equal(np.asarray(a)[:n_r],
+                                      np.asarray(b)[:n_r])
+
+
+def test_peel_round_full_trajectory():
+    """Drive a full peel to completion (level = live min each round),
+    checking kernel-vs-oracle parity at EVERY round — the compounding
+    test: a wrong deg in round k would diverge every later round."""
+    rng = np.random.default_rng(11)
+    block_n, chunk_e = 32, 64
+    n_r = 60
+    plan = _random_plan(rng, n_r, 257, 3, block_n, chunk_e)
+    ids, mem, n_r_pad, max_chunks = plan
+    # consistent initial state: deg = #incident edges, nobody peeled
+    deg0 = np.zeros(n_r_pad, np.int32)
+    np.add.at(deg0, np.asarray(ids)[np.asarray(ids) < n_r_pad - 1], 1)
+    deg = jnp.asarray(deg0)
+    peeled = jnp.asarray(
+        np.concatenate([np.zeros(n_r, np.int32),
+                        np.ones(n_r_pad - n_r, np.int32)]))
+    core = jnp.full((n_r_pad,), -1, jnp.int32)
+    order = jnp.full((n_r_pad,), -1, jnp.int32)
+    state = (deg, peeled, core, order)
+    for rnd in range(n_r + 2):
+        if bool(jnp.all(state[1] == 1)):
+            break
+        live = jnp.where(state[1] == 1, np.iinfo(np.int32).max, state[0])
+        level = int(jnp.min(live))
+        got, want = _run_both(plan, state, level, rnd, block_n, chunk_e)
+        _assert_rounds_equal(got, want)
+        state = got
+    assert bool(jnp.all(state[1] == 1)), "peel did not terminate"

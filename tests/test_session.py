@@ -167,14 +167,42 @@ def test_fallback_backends_still_work():
                                       decompose(problem, cfg).core)
 
 
-def test_use_pallas_pins_the_cold_path():
-    problem = build_problem(GRAPHS["planted40"](), 2, 3)
+def test_use_pallas_rides_the_warm_path():
+    """The round megakernel is bucketed like everything else: a stream of
+    same-bucket problems with use_pallas=True shares ONE executable (cold
+    once, warm after, no fallback) and stays array-identical to the
+    unpadded decompose()."""
     cfg = NucleusConfig(r=2, s=3, backend="dense", hierarchy="fused",
                         use_pallas=True)
     sess = Session(cfg)
-    dec = sess.decompose(problem)
-    assert sess.stats["fallback"] == 1
-    _assert_same(dec, decompose(problem, cfg), "pallas-pinned")
+    graphs = [generators.planted_cliques(100 + 3 * i, [10, 8], 0.03,
+                                         seed=20 + i) for i in range(3)]
+    problems = [build_problem(g, 2, 3) for g in graphs]
+    decs = sess.decompose_many(problems)
+    assert sess.stats["fallback"] == 0, sess.stats
+    assert len(sess.stats["buckets"]) == 1, sess.stats
+    assert sess.stats["cold"] == 1 and sess.stats["warm"] == 2, sess.stats
+    for p, d in zip(problems, decs):
+        _assert_same(d, decompose(p, cfg), f"pallas-warm n_r={p.n_r}")
+
+
+def test_pallas_over_budget_plan_falls_back():
+    """A (megakernel) plan bigger than the VMEM-plan budget must take the
+    cold path, not die: the Session races plan bytes against
+    MEGAKERNEL_PLAN_BUDGET_BYTES before bucketing."""
+    from repro.core import session as session_mod
+    problem = build_problem(GRAPHS["planted40"](), 2, 3)
+    cfg = NucleusConfig(r=2, s=3, backend="dense", hierarchy="fused",
+                        use_pallas=True)
+    old = session_mod.MEGAKERNEL_PLAN_BUDGET_BYTES
+    try:
+        session_mod.MEGAKERNEL_PLAN_BUDGET_BYTES = 1  # force over-budget
+        sess = Session(cfg)
+        dec = sess.decompose(problem)
+        assert sess.stats["fallback"] == 1
+        _assert_same(dec, decompose(problem, cfg), "pallas-over-budget")
+    finally:
+        session_mod.MEGAKERNEL_PLAN_BUDGET_BYTES = old
 
 
 def test_fallback_preserves_auto_plan_provenance():

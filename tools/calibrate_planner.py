@@ -1,0 +1,173 @@
+"""Measure the planner's decision crossovers and write planner_profile.json.
+
+`python tools/calibrate_planner.py [--quick] [--out PATH]` times the real
+engines on this device and records, per device (keyed by BOTH the device
+kind, e.g. "TPU v4", and the platform, e.g. "cpu"):
+
+  * ``tiny_nr`` — the compile-vs-eager crossover behind ``resolve_plan``
+    rule 6.  For each size on a BA-graph ladder we time a COLD dense
+    decomposition (``jax.clear_caches()`` first, so the XLA compile is
+    inside the measurement — exactly the one-shot ``decompose()`` cost the
+    planner is predicting) against the eager gather loop, and record the
+    first ladder size where cold-dense wins.  Above the ladder top we keep
+    the static fallback's spirit: dense always wins there, so the crossover
+    is the ladder top + 1 only if gather won everywhere (dense never paid
+    off at bench scale — pathological, but representable).
+  * ``pallas_default`` — the ``use_pallas=None`` verdict: the Pallas round
+    megakernel raced against the XLA round chain, steady-state (warmed,
+    compile excluded), on a mid-size (2, 3) problem.  True iff the
+    megakernel wins.  On CPU the kernel runs in interpret mode, so this
+    honestly records False there — which is why the committed CPU profile
+    keeps XLA as the default.
+  * ``shard_min_incidence`` — NOT measured on a single-device host (there
+    is nothing to race); the key is simply omitted so ``thresholds()``'s
+    per-key fallback keeps the static constant, and the provenance string
+    still says which entry fired.
+
+The profile schema is ``planner_profile.FORMAT`` v1; the committed
+``src/repro/core/planner_profile.json`` is the output of this tool on the
+reference CPU container (regenerate with ``make calibrate``).  Timings are
+min-of-repeats; the crossover is snapped to the ladder grid, which is
+deliberate — the planner needs the right order of magnitude, not a
+microbenchmark-perfect boundary.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.core import planner_profile  # noqa: E402
+from repro.core.incidence import build_problem  # noqa: E402
+from repro.core.peel import exact_coreness  # noqa: E402
+from repro.graph import generators  # noqa: E402
+
+# BA ladder for the tiny_nr crossover: n_r = n vertices at (1, 2)... but
+# the planner's tiny_nr guards *any* (r, s); we ladder on (2, 3) so n_r =
+# edge count and the dense engine pays a representative incidence plan.
+LADDER = (16, 32, 64, 128, 256, 512)
+LADDER_QUICK = (16, 64, 256)
+
+
+def _timed(fn, repeats):
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def _ladder_problem(n_vertices: int):
+    g = generators.barabasi_albert(n_vertices, 4, seed=11)
+    return build_problem(g, 2, 3)
+
+
+def measure_tiny_nr(quick: bool, log) -> int:
+    """First ladder n_r where a cold dense decompose beats eager gather."""
+    ladder = LADDER_QUICK if quick else LADDER
+    repeats = 2 if quick else 3
+    crossover = None
+    top_nr = 0
+    for n in ladder:
+        p = _ladder_problem(n)
+        top_nr = max(top_nr, p.n_r)
+
+        def cold_dense():
+            jax.clear_caches()
+            exact_coreness(p, backend="dense", fast_lane=False)
+
+        t_dense = _timed(cold_dense, repeats)
+        t_gather = _timed(
+            lambda: exact_coreness(p, backend="gather"), repeats)
+        log(f"  n={n} (n_r={p.n_r}): cold dense {t_dense * 1e3:.1f} ms, "
+            f"gather {t_gather * 1e3:.1f} ms")
+        if t_dense <= t_gather and crossover is None:
+            crossover = p.n_r
+    if crossover is None:
+        crossover = top_nr + 1          # dense never won at bench scale
+    return int(crossover)
+
+
+def measure_pallas_default(quick: bool, log) -> bool:
+    """Steady-state race: Pallas round megakernel vs the XLA round chain."""
+    n = 300 if quick else 1_000
+    repeats = 3 if quick else 5
+    g = generators.barabasi_albert(n, 6, seed=12)
+    p = build_problem(g, 2, 3)
+
+    def run(use_pallas):
+        return exact_coreness(p, backend="dense", use_pallas=use_pallas,
+                              fast_lane=False)
+
+    run(True), run(False)               # warm both executables
+    t_pallas = _timed(lambda: run(True), repeats)
+    t_xla = _timed(lambda: run(False), repeats)
+    log(f"  n_r={p.n_r}: megakernel {t_pallas * 1e3:.1f} ms, "
+        f"XLA rounds {t_xla * 1e3:.1f} ms")
+    return bool(t_pallas < t_xla)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="short ladder / fewer repeats (CI smoke)")
+    ap.add_argument("--out", default=planner_profile.PROFILE_PATH,
+                    help="profile path (default: the committed location)")
+    args = ap.parse_args(argv)
+    log = lambda msg: print(msg, flush=True)  # noqa: E731
+
+    platform = jax.default_backend()
+    device_kind = jax.devices()[0].device_kind
+    n_devices = jax.device_count()
+    log(f"calibrating planner on platform={platform!r} "
+        f"device_kind={device_kind!r} n_devices={n_devices}")
+
+    log("tiny_nr (cold dense vs eager gather):")
+    tiny_nr = measure_tiny_nr(args.quick, log)
+    log(f"  -> tiny_nr = {tiny_nr}")
+
+    log("pallas_default (megakernel vs XLA round chain, steady-state):")
+    pallas = measure_pallas_default(args.quick, log)
+    log(f"  -> pallas_default = {pallas}")
+
+    entry = {
+        "tiny_nr": tiny_nr,
+        "pallas_default": pallas,
+        # shard_min_incidence deliberately absent unless we could race a
+        # real multi-device shard; thresholds() falls back per-key.
+        "measured": {
+            "platform": platform,
+            "device_kind": device_kind,
+            "n_devices": n_devices,
+            "quick": bool(args.quick),
+        },
+    }
+    blob = {"format": planner_profile.FORMAT,
+            "version": planner_profile.VERSION,
+            "profiles": {}}
+    if os.path.exists(args.out):
+        try:
+            with open(args.out) as f:
+                old = json.load(f)
+            if old.get("format") == planner_profile.FORMAT:
+                blob["profiles"].update(old.get("profiles", {}))
+        except (ValueError, OSError):
+            pass                        # overwrite a malformed file
+    # key by both names so lookup hits whichever the runtime reports first
+    blob["profiles"][device_kind] = entry
+    blob["profiles"][platform] = entry
+    with open(args.out, "w") as f:
+        json.dump(blob, f, indent=1, sort_keys=True)
+        f.write("\n")
+    log(f"wrote {args.out} (profiles: {sorted(blob['profiles'])})")
+
+
+if __name__ == "__main__":
+    main()
