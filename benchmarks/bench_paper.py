@@ -470,6 +470,73 @@ def session_lane(quick=False) -> list[str]:
     return rows
 
 
+def stream_lane(quick=False) -> list[str]:
+    """Incremental ``update(delta)`` vs full re-decompose on a live
+    graph: single-edge insert/delete ops run through
+    ``Decomposition.update`` (steady-state, after the first op compiles
+    the padded local stages) against a fresh ``decompose()`` of each
+    edited graph — which pays incidence rebuild plus a per-shape engine
+    compile, exactly what a live service pays without the incremental
+    path.  The derived column carries the speedup EXPERIMENTS.md's
+    stream table quotes (the >=5x single-edge claim on ba4k)."""
+    import time
+
+    from repro.core import GraphDelta
+    from repro.graph import generators
+
+    rows = []
+    if quick:
+        g = generators.barabasi_albert(800, 4, seed=11)
+        gname, n_ops = "ba800", 3
+    else:
+        g = suite(["ba4k"])["ba4k"]
+        gname, n_ops = "ba4k", 6
+    rng = np.random.default_rng(11)
+    n = g.n
+    for (r, s) in ((1, 2), (2, 3)):
+        cfg = NucleusConfig(r=r, s=s, backend="dense", hierarchy="fused")
+        dec = decompose(g, cfg)
+        es = set(map(tuple, np.asarray(g.edges).tolist()))
+        ops = []
+        for i in range(n_ops + 1):  # op 0 is the compile warmup
+            if i % 2 == 0:
+                while True:
+                    u, v = sorted(int(x) for x in rng.integers(0, n, 2))
+                    if u != v and (u, v) not in es:
+                        break
+                es.add((u, v))
+                ops.append(("insert", u, v))
+            else:
+                pool = sorted(es)
+                u, v = pool[int(rng.integers(len(pool)))]
+                es.remove((u, v))
+                ops.append(("delete", u, v))
+        upd_ts, full_ts = [], []
+        for i, (op, u, v) in enumerate(ops):
+            delta = GraphDelta(**{op: np.array([[u, v]])})
+            t0 = time.perf_counter()
+            dec = dec.update(delta)
+            dt = time.perf_counter() - t0
+            if i == 0:
+                continue
+            upd_ts.append(dt)
+            # every edit shifts the shape, so each fresh decompose pays
+            # the compile a live service would pay per edit
+            t0 = time.perf_counter()
+            decompose(dec.problem.g, cfg)
+            full_ts.append(time.perf_counter() - t0)
+        upd, full = float(np.median(upd_ts)), float(np.median(full_ts))
+        st = dec.update_stats
+        rows.append(row(
+            f"stream/{gname}_r{r}s{s}_update", upd,
+            f"ops={len(upd_ts)};candidates_last={st.candidates};"
+            f"speedup_vs_full={full / max(upd, 1e-9):.1f}x"))
+        rows.append(row(
+            f"stream/{gname}_r{r}s{s}_full_redecompose", full,
+            f"n={n};edges={int(dec.problem.g.edges.shape[0])}"))
+    return rows
+
+
 ALL = {
     "fig6": fig6_variants,
     "fig7": fig7_grid,
@@ -482,4 +549,5 @@ ALL = {
     "facade": facade_lane,
     "build": build_lane,
     "session": session_lane,
+    "stream": stream_lane,
 }

@@ -17,10 +17,12 @@ plus the serialized-artifact load cost); the `build` lane compares the
 memory-bounded chunked incidence builder against the eager one (peak
 memory + wall-clock vs chunk size, fresh subprocess per cell); the
 `session` lane records the warm-pool claim (cold per-shape `decompose()`
-compiles vs one shape-bucketed `Session` executable).  Compile time is
-excluded via a warmup call — except in the `session` lane, where compile
-time IS the measurand — so the rows measure steady-state wall-clock (what
-EXPERIMENTS.md records).
+compiles vs one shape-bucketed `Session` executable); the `stream` lane
+records the live-graph claim (single-edge `update(delta)` vs full
+re-decompose of the edited graph).  Compile time is excluded via a warmup
+call — except in the `session` and `stream` lanes, where per-shape compile
+time IS (part of) the measurand — so the rows measure steady-state
+wall-clock (what EXPERIMENTS.md records).
 """
 from __future__ import annotations
 

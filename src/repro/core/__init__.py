@@ -76,6 +76,7 @@ from .backends import (Backend, BackendCapabilities, BackendResult, Plan,
 from .backends import register as register_backend
 from .api import (NucleusConfig, Decomposition, Nucleus, ConfigError,
                   decompose, plan_config)
+from .streaming import GraphDelta, UpdateStats, update_decomposition
 from .session import Session
 
 # ---------------------------------------------------------------------------

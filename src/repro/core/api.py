@@ -426,6 +426,31 @@ class Decomposition:
         self._nuclei[c] = out
         return out
 
+    # -- incremental maintenance -------------------------------------------
+    def update(self, delta, *, bucket_hook=None) -> "Decomposition":
+        """Apply a ``GraphDelta`` (edge inserts/deletes) incrementally.
+
+        Returns a NEW ``Decomposition`` for the edited graph — core
+        values, peel values, the fused join forest, and every downstream
+        query (``tree``/``cut``/``nuclei``) are array-for-array identical
+        to a fresh ``decompose()`` of the edited graph (the parity tests
+        pin this), but only the affected neighborhood is recomputed
+        (``repro.core.streaming``; DESIGN.md §10).  ``self`` is left
+        untouched and remains valid for the OLD graph.
+
+        Caveats: exact method only, (r, s) in ``streaming.SUPPORTED_RS``,
+        hierarchy 'fused' or 'none', and the ``NucleusProblem`` must
+        still be attached.  The returned artifact has no peel trace
+        (``order_round=None``, ``rounds == -1``) and carries an
+        ``update_stats`` telemetry record.  ``bucket_hook`` (internal)
+        lets ``Session.update`` count the padded-shape buckets the
+        compiled local stages hit.
+        """
+        from .streaming import update_decomposition
+        new_dec, _stats = update_decomposition(self, delta,
+                                               bucket_hook=bucket_hook)
+        return new_dec
+
     # -- serialization -----------------------------------------------------
     def to_json(self, include_inputs: bool = True) -> str:
         """Serialize the full artifact (deterministic, round-trip exact).

@@ -239,6 +239,85 @@ def link_fixpoint(parent, L, core, la, lb, lvalid, *, max_gens: int):
     return parent, L
 
 
+# ---------------------------------------------------------------------------
+# Restartable local convergence (DESIGN.md §10): the h-operator Jacobi sweep
+# the streaming update path runs over an affected subproblem.  Unlike the
+# peel (which starts from scratch), these entries start from a caller-
+# provided value state and iterate DOWNWARD to the largest fixpoint below
+# it — which equals the exact core values whenever the seed dominates them
+# pointwise and the frozen boundary carries its true values (the local
+# h-index characterization of Sarıyüce–Seshadhri–Pınar, arXiv 1704.00386).
+# ---------------------------------------------------------------------------
+
+def h_index_rows(vals: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise h-index: the largest h with >= h entries >= h.
+
+    Negative entries are padding sentinels and never count (they cannot
+    satisfy ``>= h`` for any h >= 1)."""
+    d = vals.shape[1]
+    if d == 0:
+        return jnp.zeros((vals.shape[0],), INT)
+    desc = -jnp.sort(-vals, axis=1)
+    ks = jnp.arange(1, d + 1, dtype=INT)[None, :]
+    return jnp.max(jnp.where(desc >= ks, ks, 0), axis=1)
+
+
+@jax.jit
+def local_converge(inc_sub, gather_idx, vals0, frozen, max_sweeps):
+    """Restartable-from-state h-operator iteration over a padded subproblem.
+
+    One Jacobi sweep computes, for every r-clique i of the subproblem,
+    Theta(f)[i] = h-index over { min_{j in S, j != i} f[j] : S an incident
+    s-clique }, then applies f <- min(f, Theta(f)) on the non-frozen
+    entries; the loop runs until a sweep changes nothing.  Theta is
+    monotone, so the iteration converges to the largest fixpoint below the
+    seed (Tarski) — the exact core values when the seed dominates them and
+    the frozen ring carries its true values (DESIGN.md §10).
+
+    inc_sub:    (rows, C) member indices into the subproblem's r-clique
+                space; fully -1 rows are padding.
+    gather_idx: (m, d) flat indices into the (rows * C) incidence slots
+                owned by each r-clique; ``rows * C`` is the sentinel slot
+                (reads -1, which the h-index ignores).
+    vals0:      (m,) seed values; frozen entries are boundary state.
+    max_sweeps: traced scalar safety cap (each productive sweep lowers the
+                integer total by >= 1, so sum(seed) + 2 always suffices).
+
+    Shapes are the jit key: the streaming path pads (rows, m, d) to pow2
+    buckets so a stream of updates reuses one executable per shape class.
+    Returns (vals, sweeps).
+    """
+    m = vals0.shape[0]
+    n_slots = inc_sub.shape[0] * inc_sub.shape[1]
+    colv = jnp.arange(inc_sub.shape[1], dtype=INT)[None, :]
+
+    def theta(vals):
+        va = jnp.where(inc_sub >= 0, vals[jnp.clip(inc_sub, 0, m - 1)], BIG)
+        m1 = jnp.min(va, axis=1)
+        am = jnp.argmin(va, axis=1).astype(INT)
+        m2 = jnp.min(jnp.where(colv == am[:, None], BIG, va), axis=1)
+        # min over the OTHER members: the unique argmin column sees the
+        # second-smallest, every other column sees the row minimum
+        excl = jnp.where(colv == am[:, None], m2[:, None], m1[:, None])
+        rv = jnp.where(inc_sub >= 0, excl, -1).reshape(-1)
+        rv = jnp.concatenate([rv, jnp.full((1,), -1, INT)])
+        cand = rv[jnp.clip(gather_idx, 0, n_slots)]
+        return h_index_rows(cand)
+
+    def cond(st):
+        _, done, sweeps = st
+        return (~done) & (sweeps < max_sweeps)
+
+    def body(st):
+        vals, _, sweeps = st
+        new = jnp.where(frozen, vals, jnp.minimum(vals, theta(vals)))
+        return new, jnp.all(new == vals), sweeps + 1
+
+    vals, _, sweeps = jax.lax.while_loop(
+        cond, body, (vals0, jnp.zeros((), bool), jnp.zeros((), INT)))
+    return vals, sweeps
+
+
 def peel_round(inc_rid, deg, peeled, s_alive, core, order_round, sched,
                rounds, schedule: PeelSchedule, *,
                reduce_delta: Optional[Callable] = None, resid=None,

@@ -46,9 +46,40 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..graph import INT
-from .engine import link_fixpoint, run_peel_engine
+from .engine import h_index_rows, link_fixpoint, run_peel_engine
 from .incidence import NucleusProblem
 from .schedule import PeelSchedule
+
+
+@jax.jit
+def kcore_local_converge(nbr_idx, vals0, frozen, max_sweeps):
+    """Restartable-from-state local k-core iteration (the r1s2 degeneracy
+    of ``engine.local_converge``): with C = 2 the per-s-clique "min of the
+    other members" is just the neighbor's value, so one Jacobi sweep is a
+    direct adjacency gather + h-index — no incidence-slot indirection.
+
+    nbr_idx: (m, d) neighbor indices into the subproblem's vertex space
+    (sentinel ``m`` reads -1, which the h-index ignores); vals0/frozen/
+    max_sweeps as in ``engine.local_converge``.  Shapes key the jit cache:
+    the streaming path pads to pow2 buckets so updates stay warm.
+    Returns (vals, sweeps).
+    """
+    m = vals0.shape[0]
+
+    def cond(st):
+        _, done, sweeps = st
+        return (~done) & (sweeps < max_sweeps)
+
+    def body(st):
+        vals, _, sweeps = st
+        flat = jnp.concatenate([vals, jnp.full((1,), -1, INT)])
+        theta = h_index_rows(flat[jnp.clip(nbr_idx, 0, m)])
+        new = jnp.where(frozen, vals, jnp.minimum(vals, theta))
+        return new, jnp.all(new == vals), sweeps + 1
+
+    vals, _, sweeps = jax.lax.while_loop(
+        cond, body, (vals0, jnp.zeros((), bool), jnp.zeros((), INT)))
+    return vals, sweeps
 
 
 def kcore_plan(problem: NucleusProblem):

@@ -43,6 +43,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -56,6 +57,9 @@ from .incidence import NucleusProblem
 from .schedule import PeelSchedule
 
 DEFAULT_BUCKET_FLOOR = 64
+# default LRU bound on stats["buckets"]: generous for real serving mixes
+# (hundreds of shape classes) while keeping a long-lived process O(1)
+DEFAULT_BUCKET_CAP = 256
 
 
 def bucket_size(n: int, floor: int = DEFAULT_BUCKET_FLOOR) -> int:
@@ -141,7 +145,8 @@ class Session:
     """
 
     def __init__(self, config: Optional[NucleusConfig] = None, *,
-                 bucket_floor: int = DEFAULT_BUCKET_FLOOR, **overrides):
+                 bucket_floor: int = DEFAULT_BUCKET_FLOOR,
+                 bucket_cap: int = DEFAULT_BUCKET_CAP, **overrides):
         if config is None:
             config = NucleusConfig()
         if overrides:
@@ -149,12 +154,20 @@ class Session:
         config.validate()
         self.config = config
         self.bucket_floor = int(bucket_floor)
+        # bound on tracked shape classes: a long-lived serving process
+        # seeing adversarial shape streams must not grow bookkeeping
+        # without limit (ROADMAP's PR-5 leftover).  0 disables the cap.
+        self.bucket_cap = int(bucket_cap)
         self.stats: Dict[str, Any] = {
             "decompositions": 0,   # total artifacts produced
             "warm": 0,             # padded engine calls that hit a bucket
             "cold": 0,             # padded engine calls compiling a bucket
             "fallback": 0,         # routed to plain decompose()
-            "buckets": {},         # bucket key -> call count
+            "updates": 0,          # incremental update() calls served
+            "stream_warm": 0,      # update stages hitting a known bucket
+            "stream_cold": 0,      # update stages opening a bucket
+            "evictions": 0,        # bucket entries dropped by the LRU cap
+            "buckets": {},         # bucket key -> call count (LRU order)
         }
 
     # -- front door --------------------------------------------------------
@@ -171,7 +184,11 @@ class Session:
         # budget still takes the cold path (scatter-only fallback there).
         wants_pallas = bool(config.use_pallas or (
             config.use_pallas is None and pallas_by_default()))
-        plan_bytes = 4 * problem.n_s * problem.n_sub ** 2
+        # gate on what the padded plan actually allocates — the member
+        # matrix is (e_pad, C) int32 with the edge axis pow2-bucketed, so
+        # a problem just under budget unpadded can land over it padded
+        e_pad = bucket_size(problem.n_s * problem.n_sub, DEFAULT_CHUNK_E)
+        plan_bytes = 4 * e_pad * problem.n_sub
         if config.backend != "dense" or problem.n_r == 0 or (
                 wants_pallas and plan_bytes > MEGAKERNEL_PLAN_BUDGET_BYTES):
             self.stats["fallback"] += 1
@@ -183,6 +200,24 @@ class Session:
         """Decompose a stream; same-bucket members after the first are
         warm.  Order of results matches the input order."""
         return [self.decompose(g) for g in graphs]
+
+    def update(self, dec: Decomposition, delta) -> Decomposition:
+        """Incrementally patch ``dec`` (same parity contract as
+        ``Decomposition.update``) while bucketing the streaming engine's
+        compiled stages.
+
+        The local converge / link-fixpoint stages are jitted on
+        pow2-padded shapes, so repeat updates against a live graph land
+        in the same shape classes; their keys join ``stats['buckets']``
+        (and the LRU cap) alongside the decompose buckets, tallied as
+        ``stream_warm`` / ``stream_cold``."""
+        self.stats["updates"] += 1
+
+        def hook(key: Tuple) -> None:
+            warm = self._bucket_hit(key)
+            self.stats["stream_warm" if warm else "stream_cold"] += 1
+
+        return dec.update(delta, bucket_hook=hook)
 
     # -- the padded dense path ---------------------------------------------
     def _bucket(self, problem: NucleusProblem, config: NucleusConfig, *,
@@ -196,7 +231,7 @@ class Session:
         n_r_pad = bucket_size(problem.n_r, self.bucket_floor)
         pallas_spec = None
         if wants_pallas and problem.n_s > 0:
-            _ids, _members, pallas_spec = self._pallas_plan(problem, n_r_pad)
+            pallas_spec = self._pallas_spec(problem, n_r_pad)
         return _Bucket(
             method=config.method, r=config.r, s=config.s,
             fused=config.hierarchy == "fused",
@@ -211,7 +246,6 @@ class Session:
         shape classes (edge count included, floor ``chunk_e``) with a
         pow2-rounded chunk-span bound, so the ScatterSpec — part of the
         executable's jit key — repeats across same-bucket problems."""
-        import jax
         block_n, chunk_e = DEFAULT_BLOCK_N, DEFAULT_CHUNK_E
         e_real = int(problem.mem_sids.shape[0])
         e_pad = bucket_size(e_real, chunk_e)
@@ -221,11 +255,69 @@ class Session:
                            e_pad=e_pad, n_r_pad=n_seg_pad,
                            pow2_chunks=True)
 
+    def _pallas_spec(self, problem: NucleusProblem,
+                     n_r_pad: int) -> ScatterSpec:
+        """``_pallas_plan``'s ScatterSpec without the plan arrays.
+
+        Keys must be cheap: a bucket probe that materializes the full
+        padded (e_pad, C) member matrix on device just to hash a tiling
+        is most of a cold plan's cost.  Every spec field is derived here
+        from the mem-CSR offsets alone.  The one data-dependent field,
+        the chunk-span bound, only reads the padded rid stream at chunk
+        boundaries: rid(k) for k < E is the CSR row containing slot k
+        (``searchsorted(offsets[1:], k, 'right')``), and every padded
+        slot holds the ``n_seg_pad`` sentinel.  The c0/c1 span count and
+        pow2 rounding mirror ``peel_round_plan`` / ``_round_plan`` —
+        ``_decompose_padded`` asserts the twin agrees with the real plan
+        whenever one is built."""
+        block_n, chunk_e = DEFAULT_BLOCK_N, DEFAULT_CHUNK_E
+        e_real = int(problem.mem_sids.shape[0])
+        e_pad = bucket_size(e_real, chunk_e)
+        n_seg_pad = max(n_r_pad, block_n)
+        n_chunks = e_pad // chunk_e
+        off = np.asarray(problem.mem_offsets, dtype=np.int64)
+
+        def ids_at(k: np.ndarray) -> np.ndarray:
+            rid = np.searchsorted(off[1:], k, side="right")
+            return np.where(k < e_real, rid, n_seg_pad)
+
+        k_first = np.arange(n_chunks, dtype=np.int64) * chunk_e
+        chunk_first = ids_at(k_first)
+        chunk_last = ids_at(k_first + chunk_e - 1)
+        bounds_lo = np.arange(n_seg_pad // block_n, dtype=np.int64) * block_n
+        c0 = np.searchsorted(chunk_last, bounds_lo, side="left")
+        c1 = np.searchsorted(chunk_first, bounds_lo + block_n, side="left")
+        need = max(int(np.max(np.maximum(c1 - c0, 0), initial=0)), 1)
+        mc = max(need, 8)
+        mc = 1 << (mc - 1).bit_length()
+        max_chunks = max(min(mc, n_chunks), 1)
+        return ScatterSpec(block_n=block_n, chunk_e=chunk_e,
+                           max_chunks=max_chunks, n_seg_pad=n_seg_pad,
+                           interpret=jax.default_backend() == "cpu")
+
     def bucket_key(self, problem: NucleusProblem,
                    config: Optional[NucleusConfig] = None) -> Tuple:
         """The hashable shape-class key (``stats['buckets']`` is indexed
-        by it)."""
+        by it).  Derived from shapes + the mem-CSR offsets only — probing
+        a key never builds padded plan arrays."""
         return tuple(self._bucket(problem, config or self.config).astuple())
+
+    def _bucket_hit(self, key: Tuple) -> bool:
+        """Count one engine call against ``key``'s bucket, LRU-style.
+
+        ``stats['buckets']`` is insertion-ordered; a hit reinserts the
+        key at the back, and opening a new bucket past ``bucket_cap``
+        evicts the stalest entry (only the bookkeeping is bounded — the
+        evicted executable may still sit in jax's compile cache, and a
+        re-seen key simply counts cold again).  Returns True when the
+        bucket was already warm."""
+        buckets = self.stats["buckets"]
+        seen = buckets.pop(key, 0)
+        buckets[key] = seen + 1
+        if seen == 0 and self.bucket_cap and len(buckets) > self.bucket_cap:
+            del buckets[next(iter(buckets))]
+            self.stats["evictions"] += 1
+        return seen > 0
 
     def _decompose_padded(self, problem: NucleusProblem,
                           config: NucleusConfig, plan, *,
@@ -236,9 +328,8 @@ class Session:
         key = tuple(bucket.astuple())
         sched = bucket.schedule
         n_r_pad, n_s_pad = bucket.n_r_pad, bucket.n_s_pad
-        seen = self.stats["buckets"].get(key, 0)
-        self.stats["buckets"][key] = seen + 1
-        self.stats["warm" if seen else "cold"] += 1
+        warm = self._bucket_hit(key)
+        self.stats["warm" if warm else "cold"] += 1
 
         inc = jnp.concatenate(
             [problem.inc_rid, jnp.full((n_s_pad - n_s, C), -1, INT)], axis=0)
@@ -250,8 +341,14 @@ class Session:
                                 n_s=n_s_pad)
         kernel_plan = None
         if bucket.pallas is not None:
-            # memoized on the problem — the same arrays _bucket built
+            # plan arrays materialize only here, on the execute path; the
+            # bucket key came from the shape-derived spec twin, which must
+            # agree with the real plan or warm members would miss the
+            # executable the bucket promised
             kernel_plan = self._pallas_plan(problem, n_r_pad)
+            assert kernel_plan[2] == bucket.pallas, (
+                "shape-derived ScatterSpec diverged from the real plan: "
+                f"{bucket.pallas} vs {kernel_plan[2]}")
         out = dense_coreness(padded, sched,
                              use_pallas=kernel_plan is not None,
                              max_rounds=n_r_pad + 2, hierarchy=fused,

@@ -112,7 +112,8 @@ def serve_din(n_batches: int = 8, batch: int = 512, smoke: bool = True,
 
 
 def serve_nucleus_warm_pool(n_graphs: int = 5, n_queries: int = 32,
-                            seed: int = 0, quiet: bool = False):
+                            seed: int = 0, bucket_cap: int = 0,
+                            quiet: bool = False):
     """Warm-pool serving: one ``Session``, a stream of same-bucket graphs.
 
     The heavy-traffic shape of the decompose-once/query-many story: many
@@ -130,8 +131,9 @@ def serve_nucleus_warm_pool(n_graphs: int = 5, n_queries: int = 32,
 
     if n_graphs < 1:
         raise SystemExit("--pool-graphs must be >= 1")
+    sess_kw = {"bucket_cap": bucket_cap} if bucket_cap else {}
     sess = Session(NucleusConfig(r=2, s=3, backend="dense",
-                                 hierarchy="fused"))
+                                 hierarchy="fused"), **sess_kw)
     rng = np.random.default_rng(seed)
     dec_s: List[float] = []
     lat_us: List[float] = []
@@ -252,12 +254,16 @@ def main() -> None:
                          "cache) instead of serving a single artifact")
     ap.add_argument("--pool-graphs", type=int, default=5,
                     help="graphs in the warm pool (--warm-pool)")
+    ap.add_argument("--bucket-cap", type=int, default=0,
+                    help="LRU cap on the Session's tracked shape buckets "
+                         "(--warm-pool); 0 = the Session default")
     args = ap.parse_args()
     if args.arch == "nucleus":
         if args.warm_pool:
             serve_nucleus_warm_pool(n_graphs=args.pool_graphs,
                                     n_queries=max(args.queries // max(
-                                        args.pool_graphs, 1), 1))
+                                        args.pool_graphs, 1), 1),
+                                    bucket_cap=args.bucket_cap)
         else:
             serve_nucleus(path=args.decomposition, n_queries=args.queries)
     elif args.arch == "din":

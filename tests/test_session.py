@@ -12,13 +12,17 @@ Contracts:
   * FALLBACK — configs that resolve off the dense engine still work (and
     are counted as fallbacks), including ``backend='auto'``.
 """
+import json
+
+import jax
 import numpy as np
 import pytest
 
-from repro.core import NucleusConfig, Session, build_problem, decompose
+from repro.core import (GraphDelta, NucleusConfig, Session, build_problem,
+                        decompose)
 from repro.core.schedule import PeelSchedule
 from repro.core.session import bucket_size, canonical_schedule
-from repro.graph import generators
+from repro.graph import generators, make_graph
 from repro.graph.generators import golden_suite
 
 pytestmark = pytest.mark.fast
@@ -232,3 +236,174 @@ def test_session_resolves_auto_per_problem():
     _assert_same(dec, decompose(big, NucleusConfig(
         r=2, s=3, backend=dec.config.backend,
         hierarchy=dec.config.hierarchy)), "auto-session")
+
+
+# ---------------------------------------------------------------------------
+# Plan-budget gate, shape-only keys, LRU, boundaries (the PR-7 fixes)
+# ---------------------------------------------------------------------------
+
+def test_plan_budget_gate_counts_padded_bytes():
+    """Regression: the gate must race the PADDED plan footprint against
+    the budget.  The old gate used unpadded sizes, so a problem whose
+    pow2-padded member matrix landed over budget was still sent down the
+    megakernel path.  A budget between the two sizes must fall back."""
+    from repro.core import session as session_mod
+    from repro.kernels.segment_sum import DEFAULT_CHUNK_E
+    problem = build_problem(GRAPHS["planted40"](), 2, 3)
+    C = problem.n_sub
+    unpadded = 4 * problem.n_s * C * C
+    padded = 4 * session_mod.bucket_size(problem.n_s * C,
+                                         DEFAULT_CHUNK_E) * C
+    assert unpadded < padded, "fixture must straddle the pad boundary"
+    cfg = NucleusConfig(r=2, s=3, backend="dense", hierarchy="fused",
+                        use_pallas=True)
+    old = session_mod.MEGAKERNEL_PLAN_BUDGET_BYTES
+    try:
+        session_mod.MEGAKERNEL_PLAN_BUDGET_BYTES = (unpadded + padded) // 2
+        sess = Session(cfg)
+        dec = sess.decompose(problem)
+        assert sess.stats["fallback"] == 1, (
+            "budget between unpadded and padded bytes must take the "
+            "cold path")
+        _assert_same(dec, decompose(problem, cfg), "padded-gate")
+    finally:
+        session_mod.MEGAKERNEL_PLAN_BUDGET_BYTES = old
+
+
+def test_bucket_key_matches_plan_built_key():
+    """The shape-derived ScatterSpec twin equals the spec of the real
+    (array-materializing) plan — same bucket keys as the old path."""
+    cfg = NucleusConfig(r=2, s=3, backend="dense", hierarchy="fused",
+                        use_pallas=True)
+    sess = Session(cfg)
+    for gname in sorted(GRAPHS):
+        problem = build_problem(GRAPHS[gname](), 2, 3)
+        if problem.n_s == 0:
+            continue
+        key = sess.bucket_key(problem)
+        n_r_pad = bucket_size(problem.n_r, sess.bucket_floor)
+        real_spec = sess._pallas_plan(problem, n_r_pad)[2]
+        assert key[-1] == real_spec, gname
+
+
+def test_bucket_key_builds_no_plan_arrays(monkeypatch):
+    """Probing a key must never materialize padded plan arrays."""
+    cfg = NucleusConfig(r=2, s=3, backend="dense", hierarchy="fused",
+                        use_pallas=True)
+    sess = Session(cfg)
+    problem = build_problem(GRAPHS["er20"](), 2, 3)
+
+    def boom(*a, **k):
+        raise AssertionError("bucket_key called _pallas_plan")
+
+    monkeypatch.setattr(sess, "_pallas_plan", boom)
+    key = sess.bucket_key(problem)
+    assert key[-1] is not None  # pallas spec present, derived shape-only
+
+
+def test_bucket_hit_lru_order():
+    sess = Session(NucleusConfig(r=2, s=3), bucket_cap=2)
+    assert sess._bucket_hit("a") is False
+    assert sess._bucket_hit("b") is False
+    assert sess._bucket_hit("a") is True    # refreshes a
+    assert sess._bucket_hit("c") is False   # evicts b, the stalest
+    assert set(sess.stats["buckets"]) == {"a", "c"}
+    assert sess.stats["evictions"] == 1
+    assert sess._bucket_hit("b") is False   # re-seen post-eviction: cold
+
+
+def test_bucket_lru_eviction_bounds_stats():
+    cfg = NucleusConfig(r=1, s=2, backend="dense", hierarchy="none")
+    sess = Session(cfg, bucket_floor=1, bucket_cap=2)
+    for gname in sorted(GRAPHS):
+        sess.decompose(build_problem(GRAPHS[gname](), 1, 2))
+    assert len(sess.stats["buckets"]) <= 2, sess.stats
+    assert sess.stats["evictions"] > 0, sess.stats
+    assert (sess.stats["cold"] + sess.stats["warm"]
+            == sess.stats["decompositions"] - sess.stats["fallback"])
+
+
+@pytest.mark.parametrize("n", [64, 65, 255, 256, 257])
+def test_session_parity_at_bucket_boundaries(n):
+    """Cycles sized to straddle both padding boundaries: n_r at the
+    bucket floor (64) and just past it, and the megakernel edge axis at
+    chunk_e (2*256 = 512) and one edge to either side."""
+    edges = np.array([[i, (i + 1) % n] for i in range(n)])
+    problem = build_problem(make_graph(n, edges), 1, 2)
+    assert problem.n_r == n
+    assert int(problem.mem_sids.shape[0]) == 2 * n
+    cfg = NucleusConfig(r=1, s=2, backend="dense", hierarchy="fused",
+                        use_pallas=True)
+    _assert_same(Session(cfg).decompose(problem),
+                 decompose(problem, cfg), f"cycle{n}")
+
+
+def test_kcore_fast_lane_follows_pallas_default_profile(
+        tmp_path, monkeypatch):
+    """use_pallas=None routing is profile-driven: pallas_default=False
+    sends r1s2 to the k-core fast lane, pallas_default=True pins the
+    megakernel (no fast lane) — with identical results."""
+    from repro.core import peel as peel_mod
+    from repro.core import planner_profile
+    problem = build_problem(GRAPHS["er20"](), 1, 2)
+    calls = []
+    real = peel_mod.kcore_coreness
+
+    def spy(*a, **k):
+        calls.append(1)
+        return real(*a, **k)
+
+    monkeypatch.setattr(peel_mod, "kcore_coreness", spy)
+
+    def set_profile(flag):
+        p = tmp_path / f"prof_{flag}.json"
+        p.write_text(json.dumps({
+            "format": "repro.planner-profile", "version": 1,
+            "profiles": {jax.default_backend(): {"pallas_default": flag}}}))
+        monkeypatch.setattr(planner_profile, "PROFILE_PATH", str(p))
+        planner_profile.reset_cache()
+
+    try:
+        set_profile(False)
+        r1 = peel_mod.exact_coreness(problem, backend="dense",
+                                     use_pallas=None, hierarchy=True)
+        assert calls, "pallas_default=False must route r1s2 to the lane"
+        calls.clear()
+        set_profile(True)
+        r2 = peel_mod.exact_coreness(problem, backend="dense",
+                                     use_pallas=None, hierarchy=True)
+        assert not calls, "pallas_default=True pins the megakernel"
+        np.testing.assert_array_equal(np.asarray(r1.core),
+                                      np.asarray(r2.core))
+        np.testing.assert_array_equal(np.asarray(r1.uf_parent),
+                                      np.asarray(r2.uf_parent))
+    finally:
+        planner_profile.reset_cache()
+
+
+# ---------------------------------------------------------------------------
+# Session.update: the streaming warm path
+# ---------------------------------------------------------------------------
+
+def test_session_update_streams_warm():
+    cfg = NucleusConfig(r=1, s=2, backend="dense", hierarchy="fused")
+    sess = Session(cfg)
+    g = GRAPHS["er20"]()
+    dec = sess.decompose(build_problem(g, 1, 2))
+    present = {tuple(r) for r in np.asarray(g.edges).tolist()}
+    ins = next((u, v) for u in range(g.n) for v in range(u + 1, g.n)
+               if (u, v) not in present)
+    d2 = sess.update(dec, GraphDelta(insert=np.array([ins])))
+    assert sess.stats["updates"] == 1
+    assert sess.stats["stream_cold"] >= 1
+    # the inverse edit lands in the same padded shape classes: warm
+    d3 = sess.update(d2, GraphDelta(delete=np.array([ins])))
+    assert sess.stats["updates"] == 2
+    assert sess.stats["stream_warm"] >= 1, sess.stats
+    fresh = decompose(build_problem(d3.problem.g, 1, 2), cfg)
+    np.testing.assert_array_equal(np.asarray(d3.core),
+                                  np.asarray(fresh.core))
+    np.testing.assert_array_equal(np.asarray(d3.uf_parent),
+                                  np.asarray(fresh.uf_parent))
+    np.testing.assert_array_equal(np.asarray(d3.uf_L),
+                                  np.asarray(fresh.uf_L))
