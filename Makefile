@@ -74,4 +74,7 @@ smoke:
 		python -m repro.launch.serve --arch nucleus --queries 64
 	JAX_PLATFORMS=cpu PYTHONPATH=src $(SMOKE_W) timeout 600 \
 		python -m repro.launch.serve --arch nucleus --warm-pool \
-		--pool-graphs 4 --queries 32
+		--pool-graphs 4 --queries 32 --r 2,2 --s 3,4
+	JAX_PLATFORMS=cpu PYTHONPATH=src $(SMOKE_W) timeout 900 \
+		python -m repro.launch.serve --arch nucleus --server --selftest \
+		--cache-dir /tmp/nucleus-smoke-cache

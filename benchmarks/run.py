@@ -19,10 +19,13 @@ memory + wall-clock vs chunk size, fresh subprocess per cell); the
 `session` lane records the warm-pool claim (cold per-shape `decompose()`
 compiles vs one shape-bucketed `Session` executable); the `stream` lane
 records the live-graph claim (single-edge `update(delta)` vs full
-re-decompose of the edited graph).  Compile time is excluded via a warmup
-call — except in the `session` and `stream` lanes, where per-shape compile
-time IS (part of) the measurand — so the rows measure steady-state
-wall-clock (what EXPERIMENTS.md records).
+re-decompose of the edited graph); the `server` lane records the
+multi-tenant server claims (persistent-cache restart warm path, fresh
+subprocess per cell, plus coalesced-batch throughput through the
+`Frontend`).  Compile time is excluded via a warmup call — except in the
+`session`, `stream`, and `server` lanes, where per-shape compile time IS
+(part of) the measurand — so the rows measure steady-state wall-clock
+(what EXPERIMENTS.md records).
 """
 from __future__ import annotations
 
@@ -60,6 +63,12 @@ def main() -> None:
     ap.add_argument("--json", default="",
                     help="also write rows to this path as a JSON artifact")
     args = ap.parse_args()
+
+    # device decisions once, before the first jax op initializes a
+    # backend (honors JAX_PLATFORMS etc.; --platform-style overrides
+    # belong to the entrypoints, the bench driver just pins the timing)
+    from repro.launch.platform import setup_platform
+    setup_platform()
 
     from . import bench_paper
     if args.list:

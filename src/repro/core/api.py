@@ -236,8 +236,12 @@ class Decomposition:
                  edges: Optional[np.ndarray] = None,
                  n_vertices: Optional[int] = None,
                  n_s: Optional[int] = None,
-                 plan: Optional[Plan] = None):
+                 plan: Optional[Plan] = None,
+                 name: Optional[str] = None,
+                 version: int = 0):
         self.config = config
+        self._name = name
+        self._version = int(version)
         self._plan = plan
         self.problem = problem
         self._core = np.asarray(core)
@@ -282,6 +286,25 @@ class Decomposition:
     @property
     def n_r(self) -> int:
         return int(self._core.shape[0])
+
+    # -- live-artifact identity --------------------------------------------
+    @property
+    def name(self) -> Optional[str]:
+        """The serving-side artifact name (None until published).  A
+        router publishing this decomposition under a tenant-visible name
+        sets it; ``update()`` carries it to the successor artifact."""
+        return self._name
+
+    @name.setter
+    def name(self, value: Optional[str]) -> None:
+        self._name = value
+
+    @property
+    def version(self) -> int:
+        """Monotone live-artifact version: 0 at decompose() time, +1 per
+        ``update(delta)`` — what a status endpoint reports so clients can
+        tell which edit generation answered their query."""
+        return self._version
 
     @property
     def has_hierarchy(self) -> bool:
@@ -471,6 +494,8 @@ class Decomposition:
             "n_vertices": self._n_vertices if self._n_vertices is not None
             else (None if self.problem is None else int(self.problem.g.n)),
             "rounds": self._rounds,
+            "name": self._name,
+            "live_version": self._version,
             "core": _ints(self._core),
             "order_round": _opt_ints(self._order_round),
             "peel_value": _ints(self._peel_value),
@@ -544,7 +569,9 @@ class Decomposition:
                    else np.asarray(ed, np.int64).reshape(-1, 2),
                    n_vertices=d.get("n_vertices"),
                    n_s=d.get("n_s"),
-                   plan=None if plan_d is None else Plan.from_dict(plan_d))
+                   plan=None if plan_d is None else Plan.from_dict(plan_d),
+                   name=d.get("name"),
+                   version=int(d.get("live_version", 0)))
 
     def save(self, path: str, include_inputs: bool = True) -> None:
         with open(path, "w") as f:

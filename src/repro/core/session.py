@@ -41,7 +41,9 @@ backend has its own same-shape warm cache
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+import threading
+from math import comb
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +62,11 @@ DEFAULT_BUCKET_FLOOR = 64
 # default LRU bound on stats["buckets"]: generous for real serving mixes
 # (hundreds of shape classes) while keeping a long-lived process O(1)
 DEFAULT_BUCKET_CAP = 256
+
+# the session-manifest wire format (serve.cache persists it so a restarted
+# server can pre-warm the same shape buckets before taking traffic)
+MANIFEST_FORMAT = "repro.session-manifest"
+MANIFEST_VERSION = 1
 
 
 def bucket_size(n: int, floor: int = DEFAULT_BUCKET_FLOOR) -> int:
@@ -167,8 +174,18 @@ class Session:
             "stream_warm": 0,      # update stages hitting a known bucket
             "stream_cold": 0,      # update stages opening a bucket
             "evictions": 0,        # bucket entries dropped by the LRU cap
+            "prewarmed": 0,        # buckets compiled ahead of traffic
             "buckets": {},         # bucket key -> call count (LRU order)
         }
+        # counter + bucket-table mutations take this lock so concurrent
+        # readers (a status endpoint polling while the serving worker
+        # decomposes) never see torn LRU state and no increment is lost;
+        # the ENGINE path stays single-writer by frontend discipline —
+        # the lock protects bookkeeping, not compiled-call ordering
+        self._stats_lock = threading.Lock()
+        # decompose-bucket extras the manifest needs but the hashable key
+        # cannot carry (the padded plan-array length of Pallas buckets)
+        self._bucket_meta: Dict[Tuple, Dict[str, Any]] = {}
 
     # -- front door --------------------------------------------------------
     def decompose(self, graph_or_problem) -> Decomposition:
@@ -176,7 +193,7 @@ class Session:
         ``api.decompose(graph_or_problem, self.config)``."""
         problem, config = resolve_problem(graph_or_problem, self.config)
         config, plan = plan_config(problem, config)
-        self.stats["decompositions"] += 1
+        self._count("decompositions")
         # the padded path covers the compiled dense engine, XLA round body
         # AND Pallas megakernel: the megakernel plan is padded to the same
         # pow2 buckets (edge axis included), so use_pallas rides the warm
@@ -191,7 +208,7 @@ class Session:
         plan_bytes = 4 * e_pad * problem.n_sub
         if config.backend != "dense" or problem.n_r == 0 or (
                 wants_pallas and plan_bytes > MEGAKERNEL_PLAN_BUDGET_BYTES):
-            self.stats["fallback"] += 1
+            self._count("fallback")
             return execute_plan(problem, config, plan)
         return self._decompose_padded(problem, config, plan,
                                       wants_pallas=wants_pallas)
@@ -211,11 +228,11 @@ class Session:
         in the same shape classes; their keys join ``stats['buckets']``
         (and the LRU cap) alongside the decompose buckets, tallied as
         ``stream_warm`` / ``stream_cold``."""
-        self.stats["updates"] += 1
+        self._count("updates")
 
         def hook(key: Tuple) -> None:
             warm = self._bucket_hit(key)
-            self.stats["stream_warm" if warm else "stream_cold"] += 1
+            self._count("stream_warm" if warm else "stream_cold")
 
         return dec.update(delta, bucket_hook=hook)
 
@@ -302,22 +319,132 @@ class Session:
         a key never builds padded plan arrays."""
         return tuple(self._bucket(problem, config or self.config).astuple())
 
-    def _bucket_hit(self, key: Tuple) -> bool:
+    # -- manifest export / prewarm (the persistent warm path) --------------
+    def manifest(self) -> Dict[str, Any]:
+        """Serializable record of every decompose shape bucket this
+        session has seen: the statics + padded shapes a compiled
+        executable keys on, nothing graph-specific.
+
+        ``serve.cache`` persists it next to jax's persistent compilation
+        cache; a restarted server feeds it to ``prewarm`` so the first
+        post-restart same-bucket decompose is a warm hit instead of a
+        multi-second compile.  Stream-stage buckets (from ``update``) are
+        excluded — they re-warm on first use and their keys are not
+        shape-class records."""
+        with self._stats_lock:
+            items = list(self.stats["buckets"].items())
+            meta = {k: dict(v) for k, v in self._bucket_meta.items()}
+        entries = []
+        for key, count in items:
+            m = meta.get(key)
+            if m is None or m.get("kind") != "decompose":
+                continue
+            b = _Bucket(*key)
+            entries.append({
+                "method": b.method, "r": b.r, "s": b.s, "fused": b.fused,
+                "n_r_pad": b.n_r_pad, "n_s_pad": b.n_s_pad,
+                "schedule": dataclasses.asdict(b.schedule),
+                "pallas": None if b.pallas is None
+                else dataclasses.asdict(b.pallas),
+                "e_pad": m.get("e_pad"),
+                "count": int(count)})
+        return {"format": MANIFEST_FORMAT, "version": MANIFEST_VERSION,
+                "config": self.config.to_dict(),
+                "bucket_floor": self.bucket_floor,
+                "bucket_cap": self.bucket_cap,
+                "buckets": entries}
+
+    def prewarm(self, manifest_or_buckets) -> int:
+        """Compile each manifest bucket's executable before traffic.
+
+        For every bucket record (a ``manifest()`` dict or its
+        ``"buckets"`` list) an all-ghost padded problem with the bucket's
+        exact shapes + statics is run through the dense engine: ghost
+        s-rows (-1 ids) and pre-peeled r-cliques make the run trivially
+        cheap, but the jitted computation — keyed on shapes and statics
+        only — is byte-identical to a real member's, so the call either
+        loads the executable from jax's persistent compilation cache
+        (``serve.cache.init_persistent_cache``) or compiles and caches
+        it.  The bucket is then registered warm: the first real
+        same-bucket decompose counts as a warm hit and pays no compile.
+        Returns the number of buckets prewarmed."""
+        buckets = manifest_or_buckets
+        if isinstance(buckets, dict):
+            if buckets.get("format") != MANIFEST_FORMAT:
+                raise ValueError(
+                    f"not a session manifest: format="
+                    f"{buckets.get('format')!r} (expected "
+                    f"{MANIFEST_FORMAT!r}) — regenerate it with "
+                    f"Session.manifest()")
+            buckets = buckets["buckets"]
+        done = 0
+        for e in buckets:
+            sched = PeelSchedule(**e["schedule"])
+            spec = None if e.get("pallas") is None \
+                else ScatterSpec(**e["pallas"])
+            n_r_pad, n_s_pad = int(e["n_r_pad"]), int(e["n_s_pad"])
+            C = comb(int(e["s"]), int(e["r"]))
+            ghost = _PaddedProblem(
+                inc_rid=jnp.full((n_s_pad, C), -1, INT),
+                deg0=jnp.zeros((n_r_pad,), INT),
+                n_r=n_r_pad, n_s=n_s_pad)
+            plan = None
+            meta: Dict[str, Any] = {"kind": "decompose"}
+            if spec is not None:
+                e_pad = int(e["e_pad"])
+                meta["e_pad"] = e_pad
+                # ghost plan arrays: every slot the padding sentinel —
+                # the VALUES never enter the jit key, only the shapes do
+                plan = (jnp.full((e_pad,), spec.n_seg_pad, INT),
+                        jnp.full((e_pad, C), -1, INT), spec)
+            out = dense_coreness(ghost, sched, use_pallas=spec is not None,
+                                 max_rounds=n_r_pad + 2,
+                                 hierarchy=bool(e["fused"]),
+                                 peeled0=jnp.ones((n_r_pad,), bool),
+                                 plan=plan)
+            jax.block_until_ready(out)
+            key = _Bucket(method=e["method"], r=int(e["r"]), s=int(e["s"]),
+                          fused=bool(e["fused"]), n_r_pad=n_r_pad,
+                          n_s_pad=n_s_pad, schedule=sched,
+                          pallas=spec).astuple()
+            with self._stats_lock:
+                if key not in self.stats["buckets"]:
+                    self.stats["buckets"][key] = 1
+                    self._bucket_meta[key] = meta
+                    self.stats["prewarmed"] += 1
+            done += 1
+        return done
+
+    def _count(self, name: str, by: int = 1) -> None:
+        """Lock-guarded counter bump (no lost updates under threads)."""
+        with self._stats_lock:
+            self.stats[name] += by
+
+    def _bucket_hit(self, key: Tuple,
+                    meta: Optional[Dict[str, Any]] = None) -> bool:
         """Count one engine call against ``key``'s bucket, LRU-style.
 
         ``stats['buckets']`` is insertion-ordered; a hit reinserts the
         key at the back, and opening a new bucket past ``bucket_cap``
         evicts the stalest entry (only the bookkeeping is bounded — the
         evicted executable may still sit in jax's compile cache, and a
-        re-seen key simply counts cold again).  Returns True when the
+        re-seen key simply counts cold again).  ``meta`` attaches the
+        manifest extras of a decompose bucket (stream-stage keys carry
+        none and stay out of the manifest).  Returns True when the
         bucket was already warm."""
-        buckets = self.stats["buckets"]
-        seen = buckets.pop(key, 0)
-        buckets[key] = seen + 1
-        if seen == 0 and self.bucket_cap and len(buckets) > self.bucket_cap:
-            del buckets[next(iter(buckets))]
-            self.stats["evictions"] += 1
-        return seen > 0
+        with self._stats_lock:
+            buckets = self.stats["buckets"]
+            seen = buckets.pop(key, 0)
+            buckets[key] = seen + 1
+            if meta is not None:
+                self._bucket_meta[key] = meta
+            if seen == 0 and self.bucket_cap \
+                    and len(buckets) > self.bucket_cap:
+                stale = next(iter(buckets))
+                del buckets[stale]
+                self._bucket_meta.pop(stale, None)
+                self.stats["evictions"] += 1
+            return seen > 0
 
     def _decompose_padded(self, problem: NucleusProblem,
                           config: NucleusConfig, plan, *,
@@ -328,8 +455,15 @@ class Session:
         key = tuple(bucket.astuple())
         sched = bucket.schedule
         n_r_pad, n_s_pad = bucket.n_r_pad, bucket.n_s_pad
-        warm = self._bucket_hit(key)
-        self.stats["warm" if warm else "cold"] += 1
+        meta: Dict[str, Any] = {"kind": "decompose"}
+        if bucket.pallas is not None:
+            # the plan-array length is part of the executable's jit key
+            # but not of the hashable bucket key — record it so a
+            # manifest prewarm can rebuild identically-shaped plan arrays
+            meta["e_pad"] = bucket_size(int(problem.mem_sids.shape[0]),
+                                        DEFAULT_CHUNK_E)
+        warm = self._bucket_hit(key, meta=meta)
+        self._count("warm" if warm else "cold")
 
         inc = jnp.concatenate(
             [problem.inc_rid, jnp.full((n_s_pad - n_s, C), -1, INT)], axis=0)

@@ -750,6 +750,10 @@ def update_decomposition(dec, delta: GraphDelta, *,
         uf_parent=None if parent is None
         else jnp.asarray(parent.astype(np.int32)),
         uf_L=None if L is None else jnp.asarray(L.astype(np.int32)),
-        plan=dec.plan)
+        plan=dec.plan,
+        # live-artifact identity: the successor keeps the published name
+        # and advances one edit generation (what a routed status endpoint
+        # reports as the artifact's version)
+        name=dec.name, version=dec.version + 1)
     out.update_stats = stats
     return out, stats

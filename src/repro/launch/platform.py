@@ -1,0 +1,92 @@
+"""Process-level platform/device setup for server + bench entrypoints.
+
+Long-lived processes (the nucleus server, the bench driver) need their
+device decisions made ONCE, at process start, before the first jax
+operation initializes a backend: the platform pick, the host-device
+count, and the XLA flag set a GPU serving lane should run with (async
+collectives + latency-hiding scheduler — the set the olmax/bayespec
+slices ship; see SNIPPETS.md).  ``setup_platform`` is that one call —
+``serve`` and ``benchmarks.run`` invoke it from ``main()`` ahead of any
+device use.
+
+Unlike the snippet it is modeled on, flag application *merges* into an
+existing ``XLA_FLAGS`` (a flag already set by the operator wins), so a
+container-level tuning baseline survives the entrypoint.
+"""
+from __future__ import annotations
+
+import os
+import warnings
+from typing import Any, Dict, Iterable, Optional
+
+# the GPU serving flag set (applied only when platform == "gpu"):
+# overlap collectives with compute and let the scheduler hide launch
+# latency — the knobs that matter for a request-batched serving loop
+GPU_XLA_FLAGS = (
+    "--xla_gpu_enable_async_collectives=true",
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+)
+
+
+def _merge_xla_flags(new_flags: Iterable[str]) -> str:
+    """Append ``new_flags`` to ``XLA_FLAGS``, existing settings winning:
+    a flag whose ``--name=`` already appears is left untouched."""
+    current = os.environ.get("XLA_FLAGS", "")
+    have = {f.split("=", 1)[0] for f in current.split() if f}
+    added = [f for f in new_flags if f.split("=", 1)[0] not in have]
+    merged = " ".join(filter(None, [current, *added]))
+    os.environ["XLA_FLAGS"] = merged
+    return merged
+
+
+def setup_platform(platform: Optional[str] = None, *,
+                   cpu_devices: Optional[int] = None,
+                   enable_x64: Optional[bool] = None,
+                   extra_xla_flags: Iterable[str] = ()) -> Dict[str, Any]:
+    """Configure the process's jax platform and XLA flags, once.
+
+    Call from ``main()`` before any jax computation (config updates are
+    ignored or rejected after a backend initializes).  All arguments are
+    optional; None leaves the corresponding knob at its environment
+    default (``JAX_PLATFORMS`` etc. keep working).
+
+      platform        — "cpu" | "gpu" | "tpu"; also applies the GPU
+                        serving flag set when "gpu".
+      cpu_devices     — host platform device count (the
+                        ``--xla_force_host_platform_device_count`` idiom
+                        sharded CPU tests/meshes use), clamped to the
+                        machine's core count with a warning.
+      enable_x64      — flip jax's 64-bit mode.
+      extra_xla_flags — additional ``--flag=value`` strings, merged
+                        (operator-set flags win).
+
+    Returns a record of what was applied (logged by the entrypoints,
+    asserted by tests).
+    """
+    import jax
+
+    applied: Dict[str, Any] = {"platform": None, "cpu_devices": None,
+                               "enable_x64": None, "xla_flags": None}
+    flags = list(extra_xla_flags)
+    if platform is not None:
+        jax.config.update("jax_platform_name", platform)
+        applied["platform"] = platform
+        if platform == "gpu":
+            flags = list(GPU_XLA_FLAGS) + flags
+    if cpu_devices is not None:
+        n = int(cpu_devices)
+        total = os.cpu_count() or 1
+        if n > total:
+            warnings.warn(
+                f"requested {n} host devices but only {total} cores are "
+                f"available; using {total}", RuntimeWarning)
+            n = total
+        flags.append(f"--xla_force_host_platform_device_count={n}")
+        applied["cpu_devices"] = n
+    if enable_x64 is not None:
+        jax.config.update("jax_enable_x64", bool(enable_x64))
+        applied["enable_x64"] = bool(enable_x64)
+    if flags:
+        applied["xla_flags"] = _merge_xla_flags(flags)
+    return applied

@@ -11,16 +11,22 @@ serialized ``Decomposition`` (``--decomposition path.json``, e.g. computed
 offline by the sharded backend; without a path a small graph is decomposed,
 serialized, and reloaded to prove the loop) and answers batched
 ``cut``/``nuclei`` queries with latency stats — the heavy-traffic story of
-Fig. 10 end-to-end.  ``--warm-pool`` instead drives a stream of graphs
-through one ``repro.core.Session`` so same-bucket graphs reuse the compiled
-peel executable (the offline stage at traffic, not just the query stage).
+Fig. 10 end-to-end.  ``--warm-pool`` drives a stream of graphs through the
+plan-aware ``repro.serve.Router`` (``--r/--s/--method`` accept comma lists,
+so the pool exercises mixed tenant configs across per-config Sessions).
+``--server`` starts the real multi-tenant front end (DESIGN.md §11): the
+bounded-queue ``Frontend`` + stdlib HTTP surface, with ``--cache-dir``
+wiring the persistent compilation cache + session manifest so a restarted
+server pre-warms its pools; ``--selftest`` drives a short mixed workload
+over HTTP (decompose + query + update + status) and exits — the CI smoke.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from functools import partial
-from typing import List
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -111,46 +117,73 @@ def serve_din(n_batches: int = 8, batch: int = 512, smoke: bool = True,
     return np.concatenate(scores)
 
 
+def _parse_pool_configs(r: str, s: str, method: str
+                        ) -> List[Tuple[int, int, str]]:
+    """Comma-list flag values -> positional (r, s, method) tuples (length-1
+    lists broadcast), validated so a bad pair fails at the CLI, not three
+    layers down."""
+    rs = [int(x) for x in str(r).split(",")]
+    ss = [int(x) for x in str(s).split(",")]
+    ms = [m.strip() for m in str(method).split(",")]
+    width = max(len(rs), len(ss), len(ms))
+    bcast = lambda xs: xs * width if len(xs) == 1 else xs
+    rs, ss, ms = bcast(rs), bcast(ss), bcast(ms)
+    if not len(rs) == len(ss) == len(ms):
+        raise SystemExit(
+            f"--r/--s/--method comma lists must broadcast to one length; "
+            f"got {len(rs)}/{len(ss)}/{len(ms)}")
+    for rr, sv in zip(rs, ss):
+        if not 1 <= rr < sv:
+            raise SystemExit(f"need 1 <= r < s, got ({rr}, {sv})")
+    return list(zip(rs, ss, ms))
+
+
 def serve_nucleus_warm_pool(n_graphs: int = 5, n_queries: int = 32,
                             seed: int = 0, bucket_cap: int = 0,
+                            r: str = "2", s: str = "3",
+                            method: str = "exact",
                             quiet: bool = False):
-    """Warm-pool serving: one ``Session``, a stream of same-bucket graphs.
+    """Warm-pool serving through the plan-aware router.
 
     The heavy-traffic shape of the decompose-once/query-many story: many
-    tenants submit similar-sized graphs, the offline stage runs them
-    through a shared ``Session`` so every graph after the first reuses the
-    bucket's compiled peel executable, and each resulting artifact then
-    answers cut/nuclei queries.  Prints per-graph decompose latency (the
-    cold-vs-warm split), the session's bucket stats, and aggregate query
-    latency.  Returns a stats dict.
+    tenants submit similar-sized graphs under (possibly mixed) configs;
+    the ``repro.serve.Router`` keys a ``Session`` pool per canonical
+    config, so same-config same-bucket graphs reuse one compiled peel
+    executable, and each resulting artifact then answers cut/nuclei
+    queries.  ``--r/--s/--method`` accept comma lists — graphs
+    round-robin over the config tuples, exercising multi-pool routing.
+    Prints per-graph decompose latency (the cold-vs-warm split), the
+    per-pool hit rates, and aggregate query latency.  Returns a stats
+    dict (query percentiles are None when ``n_queries == 0`` — zero
+    served queries have no latency distribution).
     """
-    from ..core import NucleusConfig, Session
-    from ..graph import generators
-
     from ..core.incidence import build_problem
+    from ..graph import generators
+    from ..serve import Request, Router
 
     if n_graphs < 1:
         raise SystemExit("--pool-graphs must be >= 1")
-    sess_kw = {"bucket_cap": bucket_cap} if bucket_cap else {}
-    sess = Session(NucleusConfig(r=2, s=3, backend="dense",
-                                 hierarchy="fused"), **sess_kw)
+    configs = _parse_pool_configs(r, s, method)
+    router = Router(**({"bucket_cap": bucket_cap} if bucket_cap else {}))
     rng = np.random.default_rng(seed)
     dec_s: List[float] = []
     lat_us: List[float] = []
     queries = 0
     # the incidence structures are built up front (the build stage has its
     # own lane/chunked story, DESIGN.md §7); the timer below isolates what
-    # the Session warms — the compiled peel + hierarchy
-    problems = []
+    # the Sessions warm — the compiled peel + hierarchy
+    requests = []
     for gi in range(n_graphs):
         # sizes drift but stay inside one power-of-two shape class, so the
         # pool demonstrates the warm path rather than bucket churn
         g = generators.planted_cliques(118 + 2 * gi, [10, 8, 6], 0.03,
                                        seed=seed + gi)
-        problems.append(build_problem(g, 2, 3))
-    for problem in problems:
+        rr, sv, mm = configs[gi % len(configs)]
+        requests.append(Request(graph=build_problem(g, rr, sv),
+                                r=rr, s=sv, method=mm))
+    for req in requests:
         t0 = time.perf_counter()
-        dec = sess.decompose(problem)
+        dec = router.route(req)
         dec_s.append(time.perf_counter() - t0)
         kmax = int(dec.core.max()) if dec.n_r else 0
         for c in rng.integers(1, max(kmax, 1) + 1, size=n_queries):
@@ -158,27 +191,35 @@ def serve_nucleus_warm_pool(n_graphs: int = 5, n_queries: int = 32,
             dec.nuclei(int(c)) if queries % 2 else dec.cut(int(c))
             lat_us.append((time.perf_counter() - t0) * 1e6)
             queries += 1
-    lat = np.asarray(lat_us) if lat_us else np.zeros((1,))
-    # None (JSON-safe), not NaN, when a 1-graph pool has no warm calls
+    report = router.report()
+    pools = report["pools"]
+    warm_hits = sum(p["stats"]["warm"] for p in pools)
+    n_buckets = sum(len(p["buckets"]) for p in pools)
+    lat = np.asarray(lat_us)
+    # None (JSON-safe), not NaN/zeros, when nothing was measured: a pool
+    # of 1 has no warm calls, zero queries have no percentiles
     warm = float(np.median(dec_s[1:])) if dec_s[1:] else None
     stats = {"graphs": n_graphs, "queries": queries,
+             "configs": [f"{m}-r{rr}s{sv}" for rr, sv, m in configs],
              "decompose_cold_s": dec_s[0],
              "decompose_warm_s": warm,
-             "p50_us": float(np.percentile(lat, 50)),
-             "p95_us": float(np.percentile(lat, 95)),
-             "session": {k: v for k, v in sess.stats.items()
-                         if k != "buckets"},
-             "n_buckets": len(sess.stats["buckets"])}
+             "p50_us": float(np.percentile(lat, 50)) if queries else None,
+             "p95_us": float(np.percentile(lat, 95)) if queries else None,
+             "pools": [{"config": p["config"], "stats": p["stats"],
+                        "hit_rate": p["hit_rate"]} for p in pools],
+             "warm_hits": warm_hits,
+             "n_buckets": n_buckets}
     if not quiet:
         warm_txt = "no warm calls (pool of 1)" if warm is None else (
             f"warm median {warm * 1e3:.0f}ms "
             f"({dec_s[0] / max(warm, 1e-9):.1f}x)")
-        print(f"warm pool: {n_graphs} graphs through 1 Session "
-              f"({stats['n_buckets']} shape bucket(s), "
-              f"{stats['session']['warm']} warm hits): "
-              f"cold {dec_s[0] * 1e3:.0f}ms, {warm_txt}; "
-              f"{queries} queries p50={stats['p50_us']:.0f}us "
-              f"p95={stats['p95_us']:.0f}us")
+        q_txt = "0 queries" if not queries else (
+            f"{queries} queries p50={stats['p50_us']:.0f}us "
+            f"p95={stats['p95_us']:.0f}us")
+        print(f"warm pool: {n_graphs} graphs through {len(pools)} "
+              f"router pool(s) ({n_buckets} shape bucket(s), "
+              f"{warm_hits} warm hits): "
+              f"cold {dec_s[0] * 1e3:.0f}ms, {warm_txt}; {q_txt}")
     return stats
 
 
@@ -224,46 +265,208 @@ def serve_nucleus(path: str = "", n_queries: int = 64, batch: int = 8,
                 n_nuc += 1
             lat_us.append((time.perf_counter() - t0) * 1e6)
     dt = time.perf_counter() - t_all
-    lat = np.asarray(lat_us) if lat_us else np.zeros((1,))
-    stats = {"queries": len(lat_us), "cut": n_cut, "nuclei": n_nuc,
-             "qps": len(lat_us) / max(dt, 1e-9),
-             "p50_us": float(np.percentile(lat, 50)),
-             "p95_us": float(np.percentile(lat, 95)),
-             "max_us": float(lat.max()), "n_r": dec.n_r, "kmax": kmax}
+    lat = np.asarray(lat_us)
+    # None (JSON-safe), not fake zeros, when no queries were served
+    served = len(lat_us)
+    stats = {"queries": served, "cut": n_cut, "nuclei": n_nuc,
+             "qps": served / max(dt, 1e-9),
+             "p50_us": float(np.percentile(lat, 50)) if served else None,
+             "p95_us": float(np.percentile(lat, 95)) if served else None,
+             "max_us": float(lat.max()) if served else None,
+             "n_r": dec.n_r, "kmax": kmax}
     if not quiet:
-        print(f"served {stats['queries']} nucleus queries "
+        q_txt = "0 queries" if not served else (
+            f"{stats['qps']:.0f} q/s, p50={stats['p50_us']:.0f}us "
+            f"p95={stats['p95_us']:.0f}us max={stats['max_us']:.0f}us")
+        print(f"served {served} nucleus queries "
               f"({n_cut} cut, {n_nuc} nuclei) from a serialized "
-              f"decomposition (n_r={dec.n_r}, kmax={kmax}): "
-              f"{stats['qps']:.0f} q/s, p50={stats['p50_us']:.0f}us "
-              f"p95={stats['p95_us']:.0f}us max={stats['max_us']:.0f}us")
+              f"decomposition (n_r={dec.n_r}, kmax={kmax}): {q_txt}")
     return stats
 
 
+def _selftest_workload(host: str, port: int, quiet: bool = False
+                       ) -> Dict[str, int]:
+    """Drive the mixed CI-smoke workload over real HTTP and assert on it.
+
+    Two same-bucket decomposes (the second MUST be a warm hit), a
+    different-config decompose (second pool), cut + nuclei queries, one
+    update delta (live version bump), and a status fetch validated
+    against the schema.  Raises ``SystemExit`` on any violated
+    invariant so the CI job fails loudly."""
+    import urllib.request
+
+    from ..graph import generators
+    from ..serve import STATUS_FORMAT, validate_status
+
+    def call(route: str, payload: Optional[Dict] = None) -> Dict:
+        url = f"http://{host}:{port}{route}"
+        if payload is None:
+            req = urllib.request.Request(url)
+        else:
+            req = urllib.request.Request(
+                url, data=json.dumps(payload).encode(),
+                headers={"Content-Type": "application/json"})
+        with urllib.request.urlopen(req, timeout=300) as resp:
+            return json.loads(resp.read())
+
+    def edges_of(g) -> List[List[int]]:
+        return np.asarray(g.edges).tolist()
+
+    def check(cond: bool, what: str) -> None:
+        if not cond:
+            raise SystemExit(f"server selftest failed: {what}")
+
+    # sizes drift but stay inside one power-of-two shape class (the
+    # warm-pool convention), so the second decompose MUST hit warm
+    g0 = generators.planted_cliques(120, [10, 8, 6], 0.03, seed=3)
+    g1 = generators.planted_cliques(122, [10, 8, 6], 0.03, seed=4)
+    # same shape bucket + config as g0/g1 -> the warm path; distinct
+    # artifact names so all three stay queryable
+    a0 = call("/decompose", {"n": g0.n, "edges": edges_of(g0),
+                             "r": 2, "s": 3, "artifact": "alpha"})
+    a1 = call("/decompose", {"n": g1.n, "edges": edges_of(g1),
+                             "r": 2, "s": 3, "artifact": "beta"})
+    # a second tenant config -> a second router pool
+    a2 = call("/decompose", {"n": g0.n, "edges": edges_of(g0),
+                             "r": 1, "s": 2, "artifact": "gamma"})
+    for name, art in (("alpha", a0), ("beta", a1), ("gamma", a2)):
+        check(art["artifact"] == name and art["version"] == 0,
+              f"decompose reply for {name!r}: {art}")
+        check(art["plan"] and "backend" in art["plan"],
+              f"decompose reply for {name!r} lacks an embedded plan")
+    cut = call("/query", {"artifact": "alpha", "kind": "cut", "c": 1})
+    check(len(cut["cut"]) == a0["n_r"], "cut length != n_r")
+    nuc = call("/query", {"artifact": "beta", "kind": "nuclei", "c": 1})
+    check(len(nuc["nuclei"]) >= 1, "no nuclei at c=1")
+    upd = call("/update", {"artifact": "alpha",
+                           "insert": [[0, int(g0.n - 1)]]})
+    check(upd["version"] == 1, f"update did not bump version: {upd}")
+    status = validate_status(call("/status"))
+    check(status["format"] == STATUS_FORMAT, "bad status format")
+    warm = sum(p["stats"]["warm"] for p in status["pools"])
+    check(warm >= 1, f"expected >=1 warm hit after same-bucket pair, "
+                     f"got {warm}")
+    check(len(status["pools"]) == 2,
+          f"expected 2 pools (two tenant configs), "
+          f"got {len(status['pools'])}")
+    check(status["artifacts"]["alpha"]["version"] == 1,
+          "status does not show the updated live version")
+    check(status["frontend"]["served"] >= 4, "served counter too low")
+    out = {"decomposes": 3, "queries": 2, "updates": 1,
+           "warm_hits": warm, "pools": len(status["pools"])}
+    if not quiet:
+        print(f"selftest ok: {out}")
+    return out
+
+
+def serve_nucleus_server(port: int = 0, cache_dir: str = "",
+                         selftest: bool = False, max_queue: int = 64,
+                         quiet: bool = False):
+    """The real multi-tenant server (DESIGN.md §11).
+
+    Builds the Router -> Frontend -> HTTP stack; with ``--cache-dir`` it
+    first wires jax's persistent compilation cache and, if a session
+    manifest from a previous run exists there, pre-warms the pools so the
+    first same-bucket decompose after restart is a compile-cache hit.  On
+    shutdown the manifest is (re)saved.  ``--selftest`` drives the mixed
+    CI-smoke workload over HTTP and exits; without it the server blocks
+    until SIGINT.
+    """
+    from ..serve import (Frontend, NucleusHTTPServer, Router,
+                         init_persistent_cache, load_manifest,
+                         prewarm_router, save_manifest)
+
+    router = Router()
+    prewarmed = 0
+    if cache_dir:
+        init_persistent_cache(cache_dir)
+        manifest = load_manifest(cache_dir)
+        if manifest is not None:
+            prewarmed = prewarm_router(router, manifest)
+    frontend = Frontend(router, max_queue=max_queue)
+    server = NucleusHTTPServer(frontend, port=port)
+    host, bound = server.start()
+    if not quiet:
+        print(f"nucleus server on http://{host}:{bound} "
+              f"({prewarmed} bucket(s) pre-warmed"
+              f"{' from ' + cache_dir if cache_dir else ''})")
+    try:
+        if selftest:
+            out = _selftest_workload(host, bound, quiet=quiet)
+            out["prewarmed"] = prewarmed
+            return out
+        while True:  # pragma: no cover - interactive serving loop
+            time.sleep(1.0)
+    except KeyboardInterrupt:  # pragma: no cover
+        pass
+    finally:
+        server.stop()
+        if cache_dir:
+            save_manifest(router, cache_dir)
+            if not quiet:
+                print(f"session manifest saved to {cache_dir}")
+
+
 def main() -> None:
+    from .platform import setup_platform
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="minicpm-2b")
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--platform", default="",
+                    help="jax platform override (cpu|gpu|tpu); applied "
+                         "before any device use, GPU adds the serving "
+                         "XLA flag set")
+    ap.add_argument("--cpu-devices", type=int, default=0,
+                    help="host platform device count (0 = leave alone)")
     ap.add_argument("--decomposition", default="",
                     help="path to a serialized Decomposition JSON "
                          "(--arch nucleus); omitted = inline offline stage")
     ap.add_argument("--queries", type=int, default=64,
-                    help="number of nucleus queries (--arch nucleus)")
+                    help="number of nucleus queries (--arch nucleus); "
+                         "0 is honored (no query stage, percentiles None)")
     ap.add_argument("--warm-pool", action="store_true",
                     help="--arch nucleus: decompose a stream of graphs "
-                         "through one warm Session (shape-bucketed compile "
-                         "cache) instead of serving a single artifact")
+                         "through the plan-aware router (per-config "
+                         "Session pools) instead of serving one artifact")
     ap.add_argument("--pool-graphs", type=int, default=5,
                     help="graphs in the warm pool (--warm-pool)")
     ap.add_argument("--bucket-cap", type=int, default=0,
-                    help="LRU cap on the Session's tracked shape buckets "
+                    help="LRU cap on each Session's tracked shape buckets "
                          "(--warm-pool); 0 = the Session default")
+    ap.add_argument("--r", default="2",
+                    help="nucleus r; comma list for mixed tenant configs "
+                         "(--warm-pool)")
+    ap.add_argument("--s", default="3",
+                    help="nucleus s; comma list for mixed tenant configs "
+                         "(--warm-pool)")
+    ap.add_argument("--method", default="exact",
+                    help="exact|approx; comma list for mixed tenant "
+                         "configs (--warm-pool)")
+    ap.add_argument("--server", action="store_true",
+                    help="--arch nucleus: start the multi-tenant HTTP "
+                         "server (Frontend + admission control)")
+    ap.add_argument("--port", type=int, default=0,
+                    help="--server port (0 = ephemeral)")
+    ap.add_argument("--cache-dir", default="",
+                    help="--server: persistent compilation cache + "
+                         "session manifest directory (restart warm path)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="--server: drive the mixed smoke workload over "
+                         "HTTP, assert the status schema, and exit")
     args = ap.parse_args()
+    setup_platform(platform=args.platform or None,
+                   cpu_devices=args.cpu_devices or None)
     if args.arch == "nucleus":
-        if args.warm_pool:
+        if args.server:
+            serve_nucleus_server(port=args.port, cache_dir=args.cache_dir,
+                                 selftest=args.selftest)
+        elif args.warm_pool:
             serve_nucleus_warm_pool(n_graphs=args.pool_graphs,
-                                    n_queries=max(args.queries // max(
-                                        args.pool_graphs, 1), 1),
-                                    bucket_cap=args.bucket_cap)
+                                    n_queries=args.queries // max(
+                                        args.pool_graphs, 1),
+                                    bucket_cap=args.bucket_cap,
+                                    r=args.r, s=args.s, method=args.method)
         else:
             serve_nucleus(path=args.decomposition, n_queries=args.queries)
     elif args.arch == "din":

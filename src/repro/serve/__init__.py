@@ -1,0 +1,35 @@
+"""The multi-tenant nucleus server (DESIGN.md §11).
+
+Four layers over the ``repro.core`` Session/planner stack, turning the
+decompose-once/query-many claim into a running service:
+
+  * ``router``   — plan-aware routing: per-canonical-config ``Session``
+                   pools, named live artifacts, per-pool Plan + hit-rate
+                   introspection.
+  * ``cache``    — the persistent warm path: jax's on-disk compilation
+                   cache + the session manifest, so a restarted server
+                   pre-warms its pools before taking traffic.
+  * ``frontend`` — bounded intake queue, one single-writer worker,
+                   same-bucket coalescing into ``decompose_many``, typed
+                   admission control (``AdmissionError``).
+  * ``status``   — the JSON status schema + validator; ``httpd`` serves
+                   it (and decompose/query/update) over stdlib HTTP.
+
+Entry point: ``python -m repro.launch.serve --arch nucleus --server``.
+"""
+from .cache import (init_persistent_cache, load_manifest, prewarm_router,
+                    router_manifest, save_manifest)
+from .frontend import (AdmissionError, Frontend, QueueFullError,
+                       padded_plan_bytes)
+from .httpd import NucleusHTTPServer
+from .router import Request, Router, canonical_config, pool_key
+from .status import (STATUS_FORMAT, STATUS_VERSION, status_report,
+                     validate_status)
+
+__all__ = [
+    "AdmissionError", "Frontend", "NucleusHTTPServer", "QueueFullError",
+    "Request", "Router", "STATUS_FORMAT", "STATUS_VERSION",
+    "canonical_config", "init_persistent_cache", "load_manifest",
+    "padded_plan_bytes", "pool_key", "prewarm_router", "router_manifest",
+    "save_manifest", "status_report", "validate_status",
+]

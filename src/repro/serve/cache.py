@@ -1,0 +1,136 @@
+"""The persistent warm path: compile caching + session manifests.
+
+A warm ``Session`` dies with its process: every restart pays the full
+XLA compile for each shape bucket before the pool is warm again — the
+dominant serving cost, multiplied by every deploy.  Two pieces make the
+pool survive restarts:
+
+  * **Persistent compilation cache.**  ``init_persistent_cache(dir)``
+    points jax's on-disk executable cache at ``dir`` (min-entry-size and
+    min-compile-time gates opened so even small peel executables
+    persist).  Compiles keyed on the same HLO — same padded shapes, same
+    statics — are then disk loads in any later process.
+  * **Session manifest.**  ``save_manifest``/``load_manifest`` persist
+    ``Router.manifest()`` (one ``Session.manifest()`` per pool: the
+    shape-class records, nothing graph-specific) as JSON next to the
+    cache.  ``Router.prewarm(manifest)`` recreates each pool and runs
+    every bucket's all-ghost twin through the engine, turning the disk
+    cache into live jitted callables — the first post-restart
+    same-bucket decompose is a warm hit, not a multi-second compile
+    (the ``server`` bench lane records the >= 3x restart claim).
+
+``init_persistent_cache`` degrades gracefully: a jax build without the
+persistent-cache config options (or one that rejects them) logs and
+returns False — serving continues with in-process warmth only.
+"""
+from __future__ import annotations
+
+import json
+import os
+import warnings
+from typing import Any, Dict, Optional
+
+from ..core.session import MANIFEST_FORMAT
+
+ROUTER_MANIFEST_FORMAT = "repro.nucleus-server-manifest"
+ROUTER_MANIFEST_VERSION = 1
+MANIFEST_BASENAME = "session_manifest.json"
+
+
+def init_persistent_cache(cache_dir: str, *,
+                          min_entry_size_bytes: int = -1,
+                          min_compile_time_secs: float = 0.0) -> bool:
+    """Enable jax's on-disk compilation cache at ``cache_dir``.
+
+    Must run before the executables of interest compile (ideally at
+    process start, right after ``launch.platform.setup_platform``).  The
+    default gates are opened fully (``-1`` / ``0.0``): peel executables
+    for small shape buckets compile fast enough that jax's stock
+    thresholds would skip exactly the entries a restarted server needs.
+    Returns True if the cache was wired, False (with a warning) when
+    this jax build lacks the config knobs.
+    """
+    import jax
+
+    try:
+        os.makedirs(cache_dir, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir",
+                          os.fspath(cache_dir))
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes",
+                          int(min_entry_size_bytes))
+        jax.config.update("jax_persistent_cache_min_compile_time_secs",
+                          float(min_compile_time_secs))
+    except Exception as e:  # older jax: knob missing/renamed — degrade
+        warnings.warn(
+            f"persistent compilation cache unavailable ({e!r}); serving "
+            f"continues with in-process warmth only", RuntimeWarning)
+        return False
+    return True
+
+
+def router_manifest(router) -> Dict[str, Any]:
+    """One manifest per pool, wrapped in the server envelope (the
+    restart contract: everything ``Router.prewarm`` needs, nothing
+    graph- or tenant-specific)."""
+    with router._lock:
+        pools = list(router._pools.values())
+    return {"format": ROUTER_MANIFEST_FORMAT,
+            "version": ROUTER_MANIFEST_VERSION,
+            "pools": [sess.manifest() for sess in pools]}
+
+
+def prewarm_router(router, manifest: Dict[str, Any]) -> int:
+    """Recreate every manifest pool on ``router`` and prewarm its shape
+    buckets; returns the total bucket count prewarmed.  Pools that
+    already exist prewarm in place (idempotent across repeated calls —
+    already-registered buckets are skipped by ``Session.prewarm``)."""
+    from ..core.api import NucleusConfig
+
+    if manifest.get("format") != ROUTER_MANIFEST_FORMAT:
+        raise ValueError(
+            f"not a server manifest: format={manifest.get('format')!r} "
+            f"(expected {ROUTER_MANIFEST_FORMAT!r}) — regenerate it with "
+            f"serve.cache.router_manifest()")
+    total = 0
+    for pool_manifest in manifest.get("pools", []):
+        if pool_manifest.get("format") != MANIFEST_FORMAT:
+            raise ValueError(
+                f"malformed pool entry: format="
+                f"{pool_manifest.get('format')!r} — the manifest was "
+                f"truncated or hand-edited; regenerate it")
+        config = NucleusConfig.from_dict(pool_manifest["config"])
+        sess = router.pool(config)
+        total += sess.prewarm(pool_manifest)
+    return total
+
+
+def save_manifest(router, path: str) -> str:
+    """Serialize ``router_manifest(router)`` to ``path`` (a directory
+    gets ``session_manifest.json`` inside it).  Returns the file path."""
+    if os.path.isdir(path):
+        path = os.path.join(path, MANIFEST_BASENAME)
+    blob = router_manifest(router)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(blob, f, sort_keys=True, indent=1)
+        f.write("\n")
+    os.replace(tmp, path)  # atomic: a crash never leaves a torn manifest
+    return path
+
+
+def load_manifest(path: str) -> Optional[Dict[str, Any]]:
+    """Read a manifest written by ``save_manifest``; a directory resolves
+    to ``session_manifest.json`` inside it.  Returns None when the file
+    does not exist (a first boot), raises on a malformed one."""
+    if os.path.isdir(path):
+        path = os.path.join(path, MANIFEST_BASENAME)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        blob = json.load(f)
+    if blob.get("format") != ROUTER_MANIFEST_FORMAT:
+        raise ValueError(
+            f"{path}: not a server manifest (format="
+            f"{blob.get('format')!r}); delete it or regenerate with "
+            f"save_manifest()")
+    return blob

@@ -1,0 +1,248 @@
+"""Plan-aware request routing: one ``Session`` pool per config class.
+
+The multi-tenant server's core problem is executable reuse across
+*heterogeneous* traffic: tenants submit different graphs under different
+(r, s)/method/hierarchy axes, and a naive Session-per-request (or one
+Session hardcoded to a single config — the old ``serve --warm-pool``)
+either recompiles constantly or serves one tenant class only.  The
+``Router`` solves it in two layers:
+
+  * **Pool keying.**  Each request's config axes are *canonicalized*
+    (axes the compiled executable never reads are pinned to defaults —
+    e.g. ``delta`` under ``method='exact'``) and the canonical config
+    keys a pool of warm ``Session``s.  Near-identical tenants — same
+    axes, different graphs — land in ONE session, where the Session's
+    pow2 shape buckets collapse them further onto shared executables.
+  * **Introspection.**  Per pool entry the router reports the embedded
+    ``Plan`` of the last decomposition (how backend/hierarchy resolved),
+    the warm/cold hit rates out of ``Session.stats``, and the tracked
+    shape buckets — the status surface (``serve.status``) serializes
+    this next to queue/admission counters.
+
+Named live artifacts ride the same pools: ``route()`` publishes a
+decomposition under ``Request.artifact``, ``update()`` applies a
+``GraphDelta`` through ``Session.update`` (stream buckets and all) and
+re-publishes the successor under the same name with ``version + 1``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+from ..core.api import (Decomposition, NucleusConfig, plan_config,
+                        resolve_problem)
+from ..core.incidence import NucleusProblem
+from ..core.session import Session
+from ..core.streaming import GraphDelta
+
+# config defaults the canonicalizer pins dead axes back to
+_DEFAULTS = NucleusConfig()
+
+
+@dataclasses.dataclass
+class Request:
+    """One unit of routed work.
+
+    ``graph`` is a ``Graph`` or prebuilt ``NucleusProblem`` (decompose
+    requests); ``update`` is a ``GraphDelta`` against the named live
+    artifact ``artifact`` (update requests — ``graph`` must be None).
+    ``artifact`` on a decompose request publishes the result under that
+    name so later queries/updates can address it."""
+
+    graph: Any = None
+    r: int = 2
+    s: int = 3
+    method: str = "exact"
+    hierarchy: str = "fused"
+    backend: str = "dense"
+    delta: float = 0.1
+    use_pallas: Optional[bool] = None
+    artifact: str = ""
+    update: Optional[GraphDelta] = None
+
+    @property
+    def kind(self) -> str:
+        return "update" if self.update is not None else "decompose"
+
+    def config(self) -> NucleusConfig:
+        return NucleusConfig(r=self.r, s=self.s, method=self.method,
+                             hierarchy=self.hierarchy, backend=self.backend,
+                             delta=self.delta, use_pallas=self.use_pallas)
+
+
+def canonical_config(config: NucleusConfig) -> NucleusConfig:
+    """Pin axes the resolved executable never reads, so near-identical
+    tenants share one pool (and its compiled executables) instead of
+    fragmenting on irrelevant knobs: ``delta`` only matters under
+    ``method='approx'``; build knobs shape the *builder*, not the peel
+    executable, and prebuilt problems skip them entirely."""
+    if config.method == "exact" and config.delta != _DEFAULTS.delta:
+        config = dataclasses.replace(config, delta=_DEFAULTS.delta)
+    return config
+
+
+def pool_key(config: NucleusConfig) -> Tuple:
+    """Hashable identity of a canonical config (the mesh, a process-local
+    handle, is excluded by ``to_dict``)."""
+    return tuple(sorted(canonical_config(config).to_dict().items(),
+                        key=lambda kv: kv[0]))
+
+
+class Router:
+    """Route heterogeneous requests through per-config ``Session`` pools.
+
+    Thread-safety contract: pool creation, artifact publication, and all
+    bookkeeping are lock-guarded, but *engine* access (decompose/update)
+    is expected to be single-writer — the ``Frontend`` drains its queue
+    from one worker thread.  Calling ``route`` concurrently is safe (the
+    Sessions' own stats locks keep counters exact) but forfeits the
+    batching the frontend provides.
+    """
+
+    def __init__(self, *, bucket_floor: Optional[int] = None,
+                 bucket_cap: Optional[int] = None):
+        self._session_kw: Dict[str, int] = {}
+        if bucket_floor is not None:
+            self._session_kw["bucket_floor"] = int(bucket_floor)
+        if bucket_cap is not None:
+            self._session_kw["bucket_cap"] = int(bucket_cap)
+        self._lock = threading.Lock()
+        self._pools: Dict[Tuple, Session] = {}
+        self._last_plan: Dict[Tuple, Any] = {}
+        # name -> (artifact, pool_key); versions live on the artifact
+        self._artifacts: Dict[str, Tuple[Decomposition, Tuple]] = {}
+
+    # -- pools -------------------------------------------------------------
+    def pool(self, config: NucleusConfig) -> Session:
+        """The warm Session serving ``config``'s canonical class (created
+        on first use)."""
+        key = pool_key(config)
+        with self._lock:
+            sess = self._pools.get(key)
+            if sess is None:
+                sess = Session(canonical_config(config), **self._session_kw)
+                self._pools[key] = sess
+            return sess
+
+    def resolve(self, request: Request
+                ) -> Tuple[NucleusProblem, NucleusConfig]:
+        """Build/adopt the request's problem under its canonical config —
+        the shared prologue ``Frontend.submit`` runs for admission (the
+        padded budget estimate needs the problem's shapes)."""
+        if request.kind != "decompose":
+            raise ValueError("resolve() is for decompose requests; "
+                             "updates address a named artifact")
+        return resolve_problem(request.graph,
+                               canonical_config(request.config()))
+
+    # -- routed work -------------------------------------------------------
+    def route(self, request: Request) -> Decomposition:
+        """Execute one request on its pool: decompose (publishing under
+        ``request.artifact`` if named) or update-in-place of a named live
+        artifact."""
+        if request.kind == "update":
+            return self.update(request.artifact, request.update)
+        problem, config = self.resolve(request)
+        sess = self.pool(config)
+        dec = sess.decompose(problem)
+        self._record(config, dec, request.artifact)
+        return dec
+
+    def route_many(self, requests: List[Request],
+                   problems: Optional[List[NucleusProblem]] = None
+                   ) -> List[Decomposition]:
+        """Same-pool batch: ``requests`` must share one canonical config
+        (the frontend coalesces by pool+bucket before calling).  Prebuilt
+        ``problems`` (from admission-time ``resolve``) skip a rebuild."""
+        if not requests:
+            return []
+        config = canonical_config(requests[0].config())
+        key = pool_key(config)
+        for req in requests[1:]:
+            if pool_key(canonical_config(req.config())) != key:
+                raise ValueError("route_many() requires same-pool requests"
+                                 " — coalesce by pool first")
+        sess = self.pool(config)
+        if problems is None:
+            problems = [self.resolve(r)[0] for r in requests]
+        decs = sess.decompose_many(problems)
+        for req, dec in zip(requests, decs):
+            self._record(config, dec, req.artifact)
+        return decs
+
+    def _record(self, config: NucleusConfig, dec: Decomposition,
+                artifact: str) -> None:
+        key = pool_key(config)
+        with self._lock:
+            if dec.plan is not None:
+                self._last_plan[key] = dec.plan
+            if artifact:
+                dec.name = artifact
+                self._artifacts[artifact] = (dec, key)
+
+    # -- named live artifacts ----------------------------------------------
+    def artifact(self, name: str) -> Decomposition:
+        with self._lock:
+            entry = self._artifacts.get(name)
+        if entry is None:
+            raise KeyError(
+                f"no live artifact named {name!r}; publish one by routing "
+                f"a decompose request with artifact={name!r}")
+        return entry[0]
+
+    def update(self, name: str, delta: GraphDelta) -> Decomposition:
+        """Incrementally advance the named artifact one edit generation
+        through its pool's ``Session.update`` (stream-bucket accounting
+        included); the successor replaces the published artifact."""
+        with self._lock:
+            entry = self._artifacts.get(name)
+        if entry is None:
+            raise KeyError(
+                f"no live artifact named {name!r} to update; publish it "
+                f"first (decompose with artifact={name!r})")
+        dec, key = entry
+        with self._lock:
+            sess = self._pools[key]
+        new = sess.update(dec, delta)
+        new.name = name
+        with self._lock:
+            self._artifacts[name] = (new, key)
+        return new
+
+    # -- introspection -----------------------------------------------------
+    def report(self) -> Dict[str, Any]:
+        """Per-pool plan + hit rates + buckets, per-artifact versions —
+        the router's slice of the status surface (``serve.status`` wraps
+        it with queue/admission counters and the JSON envelope)."""
+        with self._lock:
+            pools = list(self._pools.items())
+            plans = dict(self._last_plan)
+            artifacts = dict(self._artifacts)
+        pool_rows = []
+        for key, sess in pools:
+            with sess._stats_lock:
+                stats = {k: v for k, v in sess.stats.items()
+                         if k != "buckets"}
+                # decompose buckets carry manifest meta; everything else
+                # is a stream-stage key (see Session._bucket_hit)
+                buckets = [
+                    {"n_r_pad": k[4], "n_s_pad": k[5], "count": int(v)}
+                    if sess._bucket_meta.get(k, {}).get("kind")
+                    == "decompose"
+                    else {"stream_stage": str(k[0]), "count": int(v)}
+                    for k, v in sess.stats["buckets"].items()]
+            warm, cold = stats["warm"], stats["cold"]
+            plan = plans.get(key)
+            pool_rows.append({
+                "config": sess.config.to_dict(),
+                "plan": None if plan is None else plan.to_dict(),
+                "stats": stats,
+                "hit_rate": warm / max(warm + cold, 1),
+                "buckets": buckets,
+            })
+        artifact_rows = {
+            name: {"version": dec.version, "n_r": dec.n_r,
+                   "r": dec.config.r, "s": dec.config.s}
+            for name, (dec, _key) in artifacts.items()}
+        return {"pools": pool_rows, "artifacts": artifact_rows}

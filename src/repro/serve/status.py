@@ -1,0 +1,93 @@
+"""The status/introspection surface: one JSON report for the whole server.
+
+Replaces the warm-pool loop's ad-hoc prints with a machine-checkable
+schema the CI smoke (and any operator dashboard) asserts against:
+
+  * per-pool: the canonical config, the embedded ``Plan`` of the last
+    decomposition (how backend/hierarchy resolved), the Session's full
+    counter block, the warm/cold hit rate, and the tracked shape buckets;
+  * per-artifact: name -> live version (+ size/axes);
+  * server-wide: queue depth, intake counters (submitted/served/
+    rejected_admission/rejected_queue/batches/coalesced), and the
+    admission budget.
+
+``validate_status`` is the schema gate — it raises with the missing/
+malformed path, so the CI smoke failure names the drifted field.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+STATUS_FORMAT = "repro.nucleus-server-status"
+STATUS_VERSION = 1
+
+# required keys and their types, by path — the schema the CI smoke pins
+_TOP_KEYS = {"format": str, "version": int, "queue_depth": int,
+             "admission_budget_bytes": int, "frontend": dict,
+             "pools": list, "artifacts": dict}
+_FRONTEND_KEYS = ("submitted", "served", "failed", "rejected_admission",
+                  "rejected_queue", "batches", "coalesced")
+_POOL_KEYS = {"config": dict, "plan": (dict, type(None)), "stats": dict,
+              "hit_rate": float, "buckets": list}
+_POOL_STAT_KEYS = ("decompositions", "warm", "cold", "fallback", "updates",
+                   "stream_warm", "stream_cold", "evictions", "prewarmed")
+_ARTIFACT_KEYS = ("version", "n_r", "r", "s")
+
+
+def status_report(frontend) -> Dict[str, Any]:
+    """Snapshot the frontend + router into the status schema (pure reads
+    under the respective stats locks — safe to call from any thread
+    while the worker serves)."""
+    with frontend._stats_lock:
+        fstats = dict(frontend.stats)
+    report = frontend.router.report()
+    return {
+        "format": STATUS_FORMAT,
+        "version": STATUS_VERSION,
+        "queue_depth": int(frontend.queue_depth),
+        "admission_budget_bytes": int(frontend.admission_budget_bytes),
+        "frontend": fstats,
+        "pools": report["pools"],
+        "artifacts": report["artifacts"],
+    }
+
+
+def validate_status(d: Dict[str, Any]) -> Dict[str, Any]:
+    """Assert ``d`` matches the status schema; returns ``d``.
+
+    Raises ``ValueError`` naming the first offending path — the CI smoke
+    and the serve tests call this on every fetched report, so schema
+    drift fails with the field's name instead of a downstream KeyError.
+    """
+    def fail(path: str, why: str):
+        raise ValueError(f"status schema violation at {path}: {why}")
+
+    for key, typ in _TOP_KEYS.items():
+        if key not in d:
+            fail(key, "missing")
+        if not isinstance(d[key], typ):
+            fail(key, f"expected {typ}, got {type(d[key]).__name__}")
+    if d["format"] != STATUS_FORMAT:
+        fail("format", f"expected {STATUS_FORMAT!r}, got {d['format']!r}")
+    for key in _FRONTEND_KEYS:
+        if not isinstance(d["frontend"].get(key), int):
+            fail(f"frontend.{key}", "missing or non-integer")
+    for i, pool in enumerate(d["pools"]):
+        for key, typ in _POOL_KEYS.items():
+            if key not in pool:
+                fail(f"pools[{i}].{key}", "missing")
+            if not isinstance(pool[key], typ):
+                fail(f"pools[{i}].{key}",
+                     f"expected {typ}, got {type(pool[key]).__name__}")
+        for key in _POOL_STAT_KEYS:
+            if not isinstance(pool["stats"].get(key), int):
+                fail(f"pools[{i}].stats.{key}", "missing or non-integer")
+        if pool["plan"] is not None and "backend" not in pool["plan"]:
+            fail(f"pools[{i}].plan", "plan dict lacks 'backend'")
+        if not 0.0 <= pool["hit_rate"] <= 1.0:
+            fail(f"pools[{i}].hit_rate", f"out of [0,1]: {pool['hit_rate']}")
+    for name, art in d["artifacts"].items():
+        for key in _ARTIFACT_KEYS:
+            if not isinstance(art.get(key), int):
+                fail(f"artifacts[{name!r}].{key}", "missing or non-integer")
+    return d

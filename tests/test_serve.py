@@ -1,0 +1,380 @@
+"""The multi-tenant serve stack (DESIGN.md §11).
+
+Contracts:
+  * ROUTING — canonical configs key the pools (dead axes pinned: same
+    pool for exact tenants that differ only in ``delta``); the report
+    carries the embedded Plan, hit rates derived from ``Session.stats``,
+    and shape buckets.
+  * PARITY — artifacts produced through the concurrent Frontend (N
+    submitter threads, mixed configs/buckets) are array-for-array
+    identical to serial ``decompose()`` on the golden fixtures, and the
+    stats counters sum exactly (no lost updates).
+  * ADMISSION — over-budget graphs are rejected up front with a typed
+    ``AdmissionError`` carrying the computed padded plan bytes; a full
+    queue is a typed ``QueueFullError``; both are counted.
+  * RESTART — a Session manifest round-trips through JSON and
+    ``prewarm`` makes the first post-restart same-bucket decompose a
+    warm hit (warm==1, cold==0).
+  * STATUS — ``status_report`` validates against the pinned schema and
+    mirrors the Session counters; drift fails naming the field.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import GraphDelta, NucleusConfig, build_problem, decompose
+from repro.graph import generators
+from repro.graph.generators import golden_suite
+from repro.launch.platform import (GPU_XLA_FLAGS, _merge_xla_flags,
+                                   setup_platform)
+from repro.serve import (AdmissionError, Frontend, NucleusHTTPServer,
+                         QueueFullError, Request, Router, canonical_config,
+                         load_manifest, padded_plan_bytes, pool_key,
+                         prewarm_router, router_manifest, save_manifest,
+                         status_report, validate_status)
+
+pytestmark = pytest.mark.fast
+
+GRAPHS = golden_suite()
+
+
+def _assert_same(dec_a, dec_b, label):
+    np.testing.assert_array_equal(dec_a.core, dec_b.core,
+                                  err_msg=f"{label}: core")
+    assert dec_a.rounds == dec_b.rounds, label
+    np.testing.assert_array_equal(dec_a.peel_value, dec_b.peel_value,
+                                  err_msg=f"{label}: peel_value")
+    np.testing.assert_array_equal(dec_a.order_round, dec_b.order_round,
+                                  err_msg=f"{label}: order_round")
+    if dec_b.has_hierarchy:
+        np.testing.assert_array_equal(np.asarray(dec_a.tree.parent),
+                                      np.asarray(dec_b.tree.parent),
+                                      err_msg=f"{label}: tree parent")
+        np.testing.assert_array_equal(np.asarray(dec_a.tree.level),
+                                      np.asarray(dec_b.tree.level),
+                                      err_msg=f"{label}: tree level")
+
+
+# ---------------------------------------------------------------------------
+# Pool keying
+# ---------------------------------------------------------------------------
+
+def test_canonical_config_pins_dead_axes():
+    a = NucleusConfig(r=2, s=3, method="exact", delta=0.1)
+    b = NucleusConfig(r=2, s=3, method="exact", delta=0.7)
+    assert pool_key(a) == pool_key(b)  # delta is dead under exact
+    # ... but live under approx
+    c = NucleusConfig(r=2, s=3, method="approx", delta=0.1)
+    d = NucleusConfig(r=2, s=3, method="approx", delta=0.7)
+    assert pool_key(c) != pool_key(d)
+    assert canonical_config(b).delta == NucleusConfig().delta
+
+
+def test_router_pools_by_canonical_config():
+    router = Router()
+    g = GRAPHS["er20"]()
+    router.route(Request(graph=g, r=2, s=3, delta=0.1))
+    router.route(Request(graph=g, r=2, s=3, delta=0.9))  # same pool
+    router.route(Request(graph=g, r=1, s=2))             # new pool
+    report = router.report()
+    assert len(report["pools"]) == 2
+    # the exact pool saw both requests; the second one-shape repeat is a
+    # warm hit, so the hit rate reflects Session.stats exactly
+    exact = next(p for p in report["pools"] if p["config"]["s"] == 3)
+    assert exact["stats"]["decompositions"] == 2
+    assert exact["stats"]["warm"] == 1
+    assert exact["hit_rate"] == pytest.approx(0.5)
+    assert exact["plan"] is not None and "backend" in exact["plan"]
+    assert any("n_r_pad" in b for b in exact["buckets"])
+
+
+# ---------------------------------------------------------------------------
+# Concurrent parity + exact stats
+# ---------------------------------------------------------------------------
+
+def test_concurrent_frontend_parity_and_stats():
+    cases = [("triangle", 1, 2), ("k4", 2, 3), ("two_triangles", 2, 3),
+             ("er20", 2, 3), ("er20", 1, 2), ("planted40", 2, 3)]
+    front = Frontend(Router()).start()
+    try:
+        results: dict = {}
+        errors: list = []
+
+        def client(idx, name, r, s):
+            try:
+                g = GRAPHS[name]()
+                fut = front.submit(Request(graph=g, r=r, s=s,
+                                           artifact=f"a{idx}"))
+                results[idx] = fut.result(timeout=300)
+            except Exception as e:  # pragma: no cover - surfaced below
+                errors.append((idx, e))
+
+        threads = [threading.Thread(target=client, args=(i, *case))
+                   for i, case in enumerate(cases)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(300)
+        assert not errors, errors
+        assert len(results) == len(cases)
+        for i, (name, r, s) in enumerate(cases):
+            cfg = canonical_config(NucleusConfig(r=r, s=s, backend="dense",
+                                                 hierarchy="fused"))
+            _assert_same(results[i], decompose(GRAPHS[name](), cfg),
+                         f"{name} r={r} s={s}")
+        # counters sum exactly: nothing lost across threads
+        stats = front.stats
+        assert stats["submitted"] == len(cases)
+        assert stats["served"] == len(cases)
+        assert stats["failed"] == 0
+        pools = front.router.report()["pools"]
+        per_pool = [p["stats"] for p in pools]
+        assert sum(s["decompositions"] for s in per_pool) == len(cases)
+        for s in per_pool:
+            assert s["warm"] + s["cold"] + s["fallback"] == \
+                s["decompositions"]
+    finally:
+        front.stop()
+
+
+# ---------------------------------------------------------------------------
+# Admission control + backpressure
+# ---------------------------------------------------------------------------
+
+def test_admission_error_carries_computed_bytes():
+    front = Frontend(Router(), admission_budget_bytes=16).start()
+    try:
+        g = GRAPHS["er20"]()
+        problem = build_problem(g, 2, 3)
+        with pytest.raises(AdmissionError) as ei:
+            front.submit(Request(graph=g, r=2, s=3))
+        assert ei.value.plan_bytes == padded_plan_bytes(problem)
+        assert ei.value.budget_bytes == 16
+        assert "offline" in str(ei.value)  # actionable guidance
+        assert front.stats["rejected_admission"] == 1
+        assert front.stats["submitted"] == 0
+    finally:
+        front.stop()
+
+
+def test_queue_full_is_typed_backpressure():
+    front = Frontend(Router(), max_queue=1)
+    # no live worker draining: submissions stay queued, so the bound is
+    # deterministic (submit() only checks that the frontend was started)
+    front._worker = threading.current_thread()
+    g = GRAPHS["triangle"]()
+    front.submit(Request(graph=g, r=1, s=2))
+    with pytest.raises(QueueFullError):
+        front.submit(Request(graph=g, r=1, s=2))
+    assert front.stats["rejected_queue"] == 1
+    assert front.stats["submitted"] == 1
+
+
+def test_submit_requires_started_worker():
+    with pytest.raises(RuntimeError, match="start"):
+        Frontend(Router()).submit(Request(graph=GRAPHS["triangle"](),
+                                          r=1, s=2))
+
+
+# ---------------------------------------------------------------------------
+# Manifest round-trip + restart prewarm
+# ---------------------------------------------------------------------------
+
+def test_manifest_prewarm_restart(tmp_path):
+    router = Router()
+    g = generators.planted_cliques(40, [8, 6, 5], 0.05, seed=3)
+    router.route(Request(graph=g, r=2, s=3))
+    save_manifest(router, str(tmp_path))
+    manifest = load_manifest(str(tmp_path))
+    assert manifest is not None
+
+    # "restart": a fresh router prewarmed from the serialized manifest;
+    # the first same-bucket decompose must be a warm hit
+    restarted = Router()
+    assert prewarm_router(restarted, manifest) == 1
+    g2 = generators.planted_cliques(42, [8, 6, 5], 0.05, seed=4)
+    dec = restarted.route(Request(graph=g2, r=2, s=3))
+    stats = restarted.report()["pools"][0]["stats"]
+    assert stats["warm"] == 1
+    assert stats["cold"] == 0
+    assert stats["prewarmed"] == 1
+    # and the prewarmed executable computes the same arrays as serial
+    _assert_same(dec, decompose(g2, NucleusConfig(
+        r=2, s=3, backend="dense", hierarchy="fused")), "restart parity")
+
+
+def test_manifest_rejects_wrong_format(tmp_path):
+    p = tmp_path / "session_manifest.json"
+    p.write_text(json.dumps({"format": "something-else", "pools": []}))
+    with pytest.raises(ValueError, match="format"):
+        load_manifest(str(tmp_path))
+    assert load_manifest(str(tmp_path / "missing")) is None
+
+
+def test_router_manifest_shape():
+    router = Router()
+    router.route(Request(graph=GRAPHS["er20"](), r=2, s=3))
+    m = router_manifest(router)
+    assert m["pools"] and m["pools"][0]["buckets"]
+    entry = m["pools"][0]["buckets"][0]
+    for key in ("method", "r", "s", "fused", "n_r_pad", "n_s_pad",
+                "schedule"):
+        assert key in entry, key
+    # JSON-serializable end to end (what save_manifest writes)
+    json.dumps(m)
+
+
+# ---------------------------------------------------------------------------
+# Named live artifacts
+# ---------------------------------------------------------------------------
+
+def test_named_artifact_update_versioning():
+    router = Router()
+    g = GRAPHS["two_triangles"]()
+    dec = router.route(Request(graph=g, r=2, s=3, artifact="live"))
+    assert dec.name == "live" and dec.version == 0
+    new = router.update("live", GraphDelta(insert=np.array([[0, 4]])))
+    assert new.name == "live" and new.version == 1
+    assert router.artifact("live") is new
+    # versions survive the JSON round-trip
+    from repro.core.api import Decomposition
+    back = Decomposition.from_json(new.to_json())
+    assert back.name == "live" and back.version == 1
+    with pytest.raises(KeyError, match="no live artifact"):
+        router.artifact("ghost")
+
+
+# ---------------------------------------------------------------------------
+# Status schema
+# ---------------------------------------------------------------------------
+
+def test_status_report_matches_schema_and_stats():
+    front = Frontend(Router()).start()
+    try:
+        front.submit_wait(Request(graph=GRAPHS["er20"](), r=2, s=3,
+                                  artifact="a"))
+        front.submit_wait(Request(graph=GRAPHS["er20"](), r=2, s=3))
+        status = validate_status(status_report(front))
+        assert status["frontend"]["served"] == 2
+        pool = status["pools"][0]
+        assert pool["stats"]["decompositions"] == 2
+        assert pool["hit_rate"] == pytest.approx(0.5)
+        assert status["artifacts"]["a"]["version"] == 0
+        assert status["queue_depth"] == 0
+    finally:
+        front.stop()
+
+
+def test_validate_status_names_the_drifted_field():
+    front = Frontend(Router()).start()
+    try:
+        status = status_report(front)
+        del status["frontend"]["served"]
+        with pytest.raises(ValueError, match="frontend.served"):
+            validate_status(status)
+        status = status_report(front)
+        status["format"] = "nope"
+        with pytest.raises(ValueError, match="format"):
+            validate_status(status)
+    finally:
+        front.stop()
+
+
+# ---------------------------------------------------------------------------
+# HTTP surface
+# ---------------------------------------------------------------------------
+
+def _post(host, port, route, payload, timeout=300):
+    import urllib.request
+    req = urllib.request.Request(
+        f"http://{host}:{port}{route}", data=json.dumps(payload).encode(),
+        headers={"Content-Type": "application/json"})
+    with urllib.request.urlopen(req, timeout=timeout) as resp:
+        return json.loads(resp.read())
+
+
+def test_httpd_end_to_end():
+    import urllib.error
+    import urllib.request
+
+    server = NucleusHTTPServer(Frontend(Router()))
+    host, port = server.start()
+    try:
+        g = GRAPHS["two_triangles"]()
+        art = _post(host, port, "/decompose",
+                    {"n": g.n, "edges": np.asarray(g.edges).tolist(),
+                     "r": 2, "s": 3, "artifact": "web"})
+        assert art["artifact"] == "web" and art["version"] == 0
+        assert art["plan"] and "backend" in art["plan"]
+        cut = _post(host, port, "/query",
+                    {"artifact": "web", "kind": "cut", "c": 1})
+        assert len(cut["cut"]) == art["n_r"]
+        upd = _post(host, port, "/update",
+                    {"artifact": "web", "insert": [[0, 4]]})
+        assert upd["version"] == 1
+        with urllib.request.urlopen(
+                f"http://{host}:{port}/status", timeout=300) as resp:
+            status = validate_status(json.loads(resp.read()))
+        assert status["artifacts"]["web"]["version"] == 1
+        # typed rejections map to HTTP codes
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post(host, port, "/query",
+                  {"artifact": "ghost", "kind": "cut", "c": 1})
+        assert ei.value.code == 404
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post(host, port, "/decompose", {"n": 3})  # no edges
+        assert ei.value.code == 400
+    finally:
+        server.stop()
+
+
+def test_httpd_admission_maps_to_413():
+    import urllib.error
+
+    server = NucleusHTTPServer(
+        Frontend(Router(), admission_budget_bytes=16))
+    host, port = server.start()
+    try:
+        g = GRAPHS["er20"]()
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            _post(host, port, "/decompose",
+                  {"n": g.n, "edges": np.asarray(g.edges).tolist(),
+                   "r": 2, "s": 3})
+        assert ei.value.code == 413
+        body = json.loads(ei.value.read())
+        assert body["plan_bytes"] > body["budget_bytes"] == 16
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# Platform setup
+# ---------------------------------------------------------------------------
+
+def test_merge_xla_flags_operator_wins(monkeypatch):
+    monkeypatch.setenv(
+        "XLA_FLAGS", "--xla_gpu_enable_async_collectives=false")
+    merged = _merge_xla_flags(GPU_XLA_FLAGS)
+    # the operator's value survives; missing flags are appended
+    assert "--xla_gpu_enable_async_collectives=false" in merged
+    assert merged.count("--xla_gpu_enable_async_collectives") == 1
+    assert "--xla_gpu_enable_latency_hiding_scheduler=true" in merged
+
+
+def test_setup_platform_clamps_cpu_devices(monkeypatch):
+    monkeypatch.setenv("XLA_FLAGS", "")
+    with pytest.warns(RuntimeWarning, match="cores"):
+        applied = setup_platform(cpu_devices=1_000_000)
+    import os
+    assert applied["cpu_devices"] == (os.cpu_count() or 1)
+    assert "--xla_force_host_platform_device_count" in applied["xla_flags"]
+
+
+def test_setup_platform_noop_by_default(monkeypatch):
+    monkeypatch.delenv("XLA_FLAGS", raising=False)
+    applied = setup_platform()
+    assert applied == {"platform": None, "cpu_devices": None,
+                       "enable_x64": None, "xla_flags": None}
+    assert "XLA_FLAGS" not in __import__("os").environ
