@@ -8,7 +8,7 @@ VERIFY_BUDGET ?= 3300
 FAST_BUDGET ?= 2100
 
 .PHONY: verify verify-fast bench quick-bench regen-golden smoke bench-build \
-	calibrate kernel-tests
+	calibrate kernel-tests lint-nucleus
 
 verify:
 	JAX_PLATFORMS=cpu PYTHONPATH=src timeout $(VERIFY_BUDGET) \
@@ -20,6 +20,15 @@ verify:
 verify-fast:
 	JAX_PLATFORMS=cpu PYTHONPATH=src timeout $(FAST_BUDGET) \
 		python -m pytest -x -q -m "not slow"
+
+# nucleuslint (DESIGN.md §12): the jit/trace/concurrency static-analysis
+# gate — fails on any finding not in the committed baseline.  Pure stdlib
+# (no jax import), so it needs no accelerator deps and runs in seconds.
+# LINT_FLAGS="--json findings.json --dead --dead-json dead.json" in CI.
+LINT_FLAGS ?=
+lint-nucleus:
+	PYTHONPATH=src timeout 300 python -m repro.analysis src/repro \
+		$(LINT_FLAGS)
 
 bench:
 	JAX_PLATFORMS=cpu PYTHONPATH=src python -m benchmarks.run

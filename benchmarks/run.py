@@ -96,8 +96,17 @@ def main() -> None:
                               "derived": repr(e), **meta})
 
     if args.json:
+        # the dead-module inventory (repro.analysis, DESIGN.md §12) rides
+        # the bench artifact so the unreachable set is tracked per commit;
+        # pure-AST analysis, so a failure must never redden the bench lane
+        try:
+            from repro.analysis import dead_module_report
+            dead = dead_module_report("src")
+        except Exception as e:
+            dead = {"error": repr(e)}
         with open(args.json, "w") as f:
-            json.dump({"meta": meta, "rows": collected}, f, indent=1)
+            json.dump({"meta": meta, "rows": collected,
+                       "dead_modules": dead}, f, indent=1)
             f.write("\n")
 
     if not args.skip_roofline and not only:

@@ -1,0 +1,42 @@
+"""nucleuslint: the repo's jit/trace/concurrency static-analysis engine.
+
+Every correctness regression this reproduction has shipped and then fixed
+by hand belongs to a statically detectable class: host-sync ``bool()``
+calls inside compiled loops (the PR 2 ``connectivity.py`` rewrite),
+Session bucket keys that silently materialized incidence (PR 7), and
+unguarded mutation of shared ``Session`` counters under the threaded
+server (PR 8).  The paper's contribution is making the hierarchy
+computation *safely* parallel; this package enforces the reproduction's
+analogous invariants mechanically, on every PR (DESIGN.md §12):
+
+  * **NL1xx trace hygiene** — no host syncs or Python control flow on
+    traced values inside ``jax.jit`` / ``lax.while_loop`` / ``lax.scan``
+    / ``shard_map`` bodies.
+  * **NL2xx recompile hazards** — jit keys must be shapes + declared
+    statics: no per-call ``jax.jit`` closures, no value-varying
+    captures, no unhashable static arguments.
+  * **NL3xx concurrency** — attributes a class ever guards with its lock
+    must be guarded at every write; engine access stays single-writer.
+  * **NL4xx registry conformance** — a registered ``Backend`` may only
+    touch the config knobs its ``BackendCapabilities`` declaration
+    claims, so the derived legality matrix is verifiable, not trusted.
+
+Pure stdlib (``ast`` + ``pathlib``): importable and runnable without jax,
+so the CI lint lane needs no accelerator deps.  Entry points:
+
+  ``python -m repro.analysis src/repro``          lint (text output)
+  ``python -m repro.analysis --json out.json``    machine-readable
+  ``python -m repro.analysis --regen-baseline``   re-accept current state
+  ``python -m repro.analysis --dead``             dead-module report
+  ``make lint-nucleus``                           the CI gate
+"""
+from .findings import Finding
+from .driver import Project, run_analysis, load_project
+from .baseline import load_baseline, write_baseline, apply_baseline
+from .deadmod import dead_module_report
+
+__all__ = [
+    "Finding", "Project", "run_analysis", "load_project",
+    "load_baseline", "write_baseline", "apply_baseline",
+    "dead_module_report",
+]

@@ -1,0 +1,185 @@
+"""``--dead``: modules unreachable from the product surface.
+
+The growth seed carried whole LLM-era subtrees (``kernels/
+flash_attention.py``, ``configs/minicpm_2b.py``, ...) that nothing in
+the nucleus-decomposition product imports.  This report makes that
+inventory explicit and keeps it in the bench artifact so reviewers see
+the dead set shrink (or grow) per PR — it never deletes anything.
+
+Reachability is an import-graph BFS over ``src/repro``:
+
+  * **Roots** — every module under the product packages ``repro.core``,
+    ``repro.serve``, ``repro.launch``, plus every ``repro.*`` module
+    imported (textually, via AST) by files under ``benchmarks/`` and
+    ``tests/``.
+  * **Edges** — ``import x`` / ``from x import y`` statements, with
+    relative imports resolved against the importing module's package;
+    ``from pkg import name`` also targets ``pkg.name`` when that is a
+    module (the lazy-import idiom inside function bodies counts — the
+    walk covers the whole AST, not just top level).
+  * **Dead** — modules never reached.  Packages whose every module is
+    dead are summarized as ``pkg/*``.
+
+Because ``repro.launch`` still drives the LLM-era train/serve/dryrun
+lanes, most legacy modules are *reachable* under that definition; the
+report therefore also carries a secondary ``nucleus_unreachable`` view —
+modules unreachable from ``repro.core`` + ``repro.serve`` alone — which
+is the actual LLM-era inventory a future removal PR would work from.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, List, Sequence, Set
+
+TOP = "repro"
+
+
+def _discover(src_root: str) -> Dict[str, str]:
+    """dotted module name -> file path for every .py under src_root
+    (src_root is the directory CONTAINING the ``repro`` package)."""
+    out: Dict[str, str] = {}
+    pkg_root = os.path.join(src_root, TOP)
+    for dirpath, dirnames, filenames in os.walk(pkg_root):
+        dirnames[:] = sorted(d for d in dirnames if d != "__pycache__")
+        for f in sorted(filenames):
+            if not f.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, f)
+            rel = os.path.relpath(path, src_root)
+            parts = rel[:-3].split(os.sep)
+            if parts[-1] == "__init__":
+                parts = parts[:-1]
+            out[".".join(parts)] = path
+    return out
+
+
+def _imports_of(path: str, module: str) -> Set[str]:
+    """Dotted names this file imports (absolute, ``repro.*`` only)."""
+    with open(path, encoding="utf-8") as f:
+        try:
+            tree = ast.parse(f.read(), filename=path)
+        except SyntaxError:
+            return set()
+    pkg_parts = module.split(".")
+    is_pkg = os.path.basename(path) == "__init__.py"
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                out.add(alias.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                # relative: `from ..core import engine` in repro.serve.x
+                # resolves against the containing package
+                base_parts = pkg_parts if is_pkg else pkg_parts[:-1]
+                cut = node.level - 1
+                base = base_parts[:len(base_parts) - cut] if cut else \
+                    base_parts
+                prefix = ".".join(base)
+                stem = f"{prefix}.{node.module}" if node.module else prefix
+            else:
+                stem = node.module or ""
+            if stem:
+                out.add(stem)
+                for alias in node.names:
+                    out.add(f"{stem}.{alias.name}")
+    return {n for n in out if n == TOP or n.startswith(TOP + ".")}
+
+
+def _external_roots(dirs: Sequence[str]) -> Set[str]:
+    """``repro.*`` modules imported by .py files under ``dirs``
+    (benchmarks/, tests/ — anything there keeps its imports alive)."""
+    out: Set[str] = set()
+    for d in dirs:
+        if not os.path.isdir(d):
+            continue
+        for dirpath, dirnames, filenames in os.walk(d):
+            dirnames[:] = sorted(x for x in dirnames
+                                 if x not in ("__pycache__", ".git"))
+            for f in sorted(filenames):
+                if f.endswith(".py"):
+                    path = os.path.join(dirpath, f)
+                    out |= _imports_of(path, "external")
+    return out
+
+
+ROOT_PACKAGES = ("repro.core", "repro.serve", "repro.launch")
+NUCLEUS_PACKAGES = ("repro.core", "repro.serve")
+
+
+def dead_module_report(src_root: str = "src",
+                       extra_root_dirs: Sequence[str] = ("benchmarks",
+                                                         "tests"),
+                       ) -> Dict[str, object]:
+    """The dead-module inventory (JSON-ready; see module docstring)."""
+    modules = _discover(src_root)
+    imports = {m: _imports_of(p, m) for m, p in modules.items()}
+
+    def resolve(name: str) -> List[str]:
+        """Importing ``a.b.c`` reaches a.b.c AND executes a, a.b."""
+        hits = []
+        parts = name.split(".")
+        for i in range(1, len(parts) + 1):
+            prefix = ".".join(parts[:i])
+            if prefix in modules:
+                hits.append(prefix)
+        return hits
+
+    def bfs(roots: Set[str]) -> Set[str]:
+        reachable: Set[str] = set()
+        frontier = sorted(roots)
+        while frontier:
+            m = frontier.pop()
+            if m in reachable:
+                continue
+            reachable.add(m)
+            for name in imports.get(m, ()):
+                for hit in resolve(name):
+                    if hit not in reachable:
+                        frontier.append(hit)
+        return reachable
+
+    def pkg_roots(prefixes: Sequence[str]) -> Set[str]:
+        return {m for m in modules
+                if m in prefixes or any(m.startswith(r + ".")
+                                        for r in prefixes)}
+
+    def summarize(dead: List[str], reachable: Set[str]) -> List[str]:
+        # collapse fully-dead packages for the human summary
+        by_pkg: Dict[str, List[str]] = {}
+        for m in dead:
+            pkg = m.rsplit(".", 1)[0] if "." in m else m
+            by_pkg.setdefault(pkg, []).append(m)
+        summary: List[str] = []
+        for pkg, members in sorted(by_pkg.items()):
+            live_in_pkg = any(x == pkg or x.startswith(pkg + ".")
+                              for x in reachable)
+            if not live_in_pkg and len(members) > 1:
+                summary.append(f"{pkg}.* ({len(members)} modules)")
+            else:
+                summary.extend(members)
+        return summary
+
+    roots = pkg_roots(ROOT_PACKAGES)
+    for name in _external_roots(extra_root_dirs):
+        roots.update(resolve(name))
+    reachable = bfs(roots)
+    dead = sorted(m for m in modules if m not in reachable)
+
+    nucleus_reachable = bfs(pkg_roots(NUCLEUS_PACKAGES))
+    nucleus_dead = sorted(m for m in modules if m not in nucleus_reachable)
+
+    return {
+        "src_root": src_root,
+        "roots": sorted(roots),
+        "n_modules": len(modules),
+        "n_reachable": len(reachable),
+        "dead": dead,
+        "dead_summary": summarize(dead, reachable),
+        "dead_paths": [os.path.relpath(modules[m]).replace(os.sep, "/")
+                       for m in dead],
+        "nucleus_unreachable": nucleus_dead,
+        "nucleus_unreachable_summary": summarize(nucleus_dead,
+                                                 nucleus_reachable),
+    }

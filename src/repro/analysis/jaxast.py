@@ -1,0 +1,375 @@
+"""Shared AST machinery: traced-context discovery + value taint.
+
+The trace-hygiene and recompile rules both need the same two facts about
+a module:
+
+  * **Which function bodies trace.**  A function is a *traced context*
+    when jax re-executes it symbolically: decorated with ``jax.jit`` (or
+    ``partial(jax.jit, ...)``), passed as the body/cond of
+    ``lax.while_loop`` / ``lax.scan`` / ``lax.fori_loop`` / ``lax.cond``
+    / ``lax.switch`` / ``lax.map`` / ``shard_map`` / ``pallas_call`` /
+    ``jax.jit(f)``'s call form, or lexically nested inside one of those
+    (a closure the traced body calls).  Discovery is name-based and
+    module-local — names passed at a traced-body argument position mark
+    the same-module ``def`` of that name.
+  * **Which values are traced.**  Inside a traced context the parameters
+    (minus the decorator's ``static_argnames``) seed a forward taint;
+    assignment propagates it, and the static accessors ``.shape`` /
+    ``.ndim`` / ``.dtype`` block it (shape arithmetic is Python-static
+    under tracing — ``n = x.shape[0]`` is a plain int).  Nested contexts
+    inherit the enclosing taint through their closure.
+
+The taint is deliberately additive (a rebound name stays tainted): the
+rules it feeds flag *operations* on tainted values, so the cost of the
+imprecision is a stray finding — silenced with an inline suppression —
+never a missed host sync.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple, Union
+
+FuncNode = Union[ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda]
+FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+# callee (matched on the trailing dotted segments) -> positions of the
+# arguments that are traced callables
+TRACED_ARG_POSITIONS: Dict[str, Tuple[int, ...]] = {
+    "while_loop": (0, 1),
+    "scan": (0,),
+    "fori_loop": (2,),
+    "cond": (1, 2),
+    "switch": (),          # branches arg handled specially (list at [1])
+    "map": (0,),
+    "shard_map": (0,),
+    "pallas_call": (0,),
+    "jit": (0,),
+    "checkpoint": (0,),
+    "remat": (0,),
+    "vmap": (0,),
+    "pmap": (0,),
+    "custom_jvp": (0,),
+    "custom_vjp": (0,),
+}
+# the bare names above are jax-ambiguous (``map`` is a builtin, ``cond``
+# a common variable); require a dotted qualifier for these
+REQUIRE_QUALIFIER = {"cond", "map", "switch", "scan", "jit", "checkpoint",
+                     "remat", "vmap", "pmap", "custom_jvp", "custom_vjp"}
+JAX_QUALIFIERS = {"jax", "lax", "pl", "pallas", "experimental", "linen",
+                  "nn", "checkpoint"}
+
+# attribute accesses that launder a traced value into a Python-static one
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "sharding"}
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'jax.lax.while_loop' for the matching Attribute/Name chain."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def is_jit_name(name: Optional[str]) -> bool:
+    """Does ``name`` denote jax.jit (jit / jax.jit / eqx.filter_jit)?"""
+    return bool(name) and (name == "jit" or name.endswith(".jit")
+                           or name.endswith("filter_jit"))
+
+
+def _string_names(node: ast.AST) -> Set[str]:
+    """Literal string / tuple-or-list-of-strings -> the set of names."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out: Set[str] = set()
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.add(e.value)
+        return out
+    return set()
+
+
+def jit_decorator_statics(dec: ast.AST) -> Optional[Set[str]]:
+    """If ``dec`` is a jit decorator, the declared static_argnames
+    (possibly empty); None when it is not a jit decorator.
+
+    Recognized forms: ``@jax.jit``, ``@jit``, ``@partial(jax.jit, ...)``,
+    ``@functools.partial(jax.jit, static_argnames=(...))``,
+    ``@jax.jit`` is never called with arguments directly, but
+    ``@jax.jit(fn)``-style factories are matched defensively.
+    """
+    name = dotted_name(dec)
+    if is_jit_name(name):
+        return set()
+    if isinstance(dec, ast.Call):
+        fn = dotted_name(dec.func)
+        if fn and fn.split(".")[-1] == "partial" and dec.args \
+                and is_jit_name(dotted_name(dec.args[0])):
+            statics: Set[str] = set()
+            for kw in dec.keywords:
+                if kw.arg in ("static_argnames", "static_argnums"):
+                    statics |= _string_names(kw.value)
+            return statics
+        if is_jit_name(fn):
+            statics = set()
+            for kw in dec.keywords:
+                if kw.arg in ("static_argnames", "static_argnums"):
+                    statics |= _string_names(kw.value)
+            return statics
+    return None
+
+
+def traced_callee_positions(call: ast.Call) -> Tuple[int, ...]:
+    """Argument positions of ``call`` that receive traced callables
+    (empty when the callee is not a known tracing combinator)."""
+    name = dotted_name(call.func)
+    if not name:
+        return ()
+    parts = name.split(".")
+    last = parts[-1]
+    if last not in TRACED_ARG_POSITIONS:
+        return ()
+    if last in REQUIRE_QUALIFIER and len(parts) == 1:
+        return ()
+    if len(parts) > 1 and last in REQUIRE_QUALIFIER \
+            and parts[-2] not in JAX_QUALIFIERS:
+        return ()
+    return TRACED_ARG_POSITIONS[last]
+
+
+@dataclasses.dataclass
+class TracedContext:
+    """One function body jax traces, with its taint environment."""
+
+    node: FuncNode
+    name: str                   # display name ("_dense_engine", "<lambda>")
+    reason: str                 # "decorated jax.jit" / "lax.while_loop body"
+    statics: Set[str]           # param names excluded from taint seeding
+    tainted: Set[str] = dataclasses.field(default_factory=set)
+    parent: Optional["TracedContext"] = None
+
+
+def _param_names(node: FuncNode) -> List[str]:
+    a = node.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+class _ContextFinder(ast.NodeVisitor):
+    """Collect traced roots: decorated defs, loop-body callables (by name
+    or inline lambda), and the names referenced at traced positions."""
+
+    def __init__(self):
+        self.decorated: Dict[FuncNode, Tuple[str, Set[str]]] = {}
+        self.body_nodes: Dict[FuncNode, str] = {}   # lambdas passed inline
+        self.body_names: Dict[str, str] = {}        # name -> reason
+        self.defs: Dict[str, List[FuncNode]] = {}
+
+    def visit_FunctionDef(self, node):
+        self._def(node)
+
+    def visit_AsyncFunctionDef(self, node):
+        self._def(node)
+
+    def _def(self, node):
+        self.defs.setdefault(node.name, []).append(node)
+        for dec in node.decorator_list:
+            statics = jit_decorator_statics(dec)
+            if statics is not None:
+                self.decorated[node] = (
+                    f"decorated {dotted_name(dec) or 'jax.jit'}", statics)
+                break
+        self.generic_visit(node)
+
+    def visit_Call(self, node):
+        positions = traced_callee_positions(node)
+        callee = dotted_name(node.func) or "?"
+        for pos in positions:
+            if pos >= len(node.args):
+                continue
+            arg = node.args[pos]
+            self._mark(arg, f"{callee} body")
+        # lax.switch takes a *list* of branch callables at position 1
+        if callee.split(".")[-1] == "switch" and len(node.args) > 1 \
+                and isinstance(node.args[1], (ast.List, ast.Tuple)):
+            for e in node.args[1].elts:
+                self._mark(e, f"{callee} branch")
+        self.generic_visit(node)
+
+    def _mark(self, arg: ast.AST, reason: str) -> None:
+        if isinstance(arg, ast.Lambda):
+            self.body_nodes[arg] = reason
+        else:
+            name = dotted_name(arg)
+            if name and "." not in name:
+                self.body_names.setdefault(name, reason)
+
+
+def find_traced_contexts(tree: ast.Module) -> List[TracedContext]:
+    """All traced contexts of a module, nested contexts included.
+
+    Each root context is returned with taint seeded from its non-static
+    parameters; nested defs/lambdas inside a root become child contexts
+    inheriting the enclosing taint (their own parameters seed too — a
+    closure the traced body calls receives traced values).
+    """
+    finder = _ContextFinder()
+    finder.visit(tree)
+    roots: List[Tuple[FuncNode, str, Set[str]]] = []
+    for node, (reason, statics) in finder.decorated.items():
+        roots.append((node, reason, statics))
+    for node, reason in finder.body_nodes.items():
+        roots.append((node, reason, set()))
+    claimed = {id(n) for n, _, _ in roots}
+    for name, reason in finder.body_names.items():
+        for node in finder.defs.get(name, []):
+            if id(node) not in claimed:
+                roots.append((node, reason, set()))
+                claimed.add(id(node))
+    out: List[TracedContext] = []
+    for node, reason, statics in roots:
+        ctx = TracedContext(
+            node=node, reason=reason, statics=statics,
+            name=getattr(node, "name", "<lambda>"))
+        ctx.tainted = {p for p in _param_names(node) if p not in statics}
+        out.append(ctx)
+    return out
+
+
+class TaintEnv:
+    """Forward taint over one traced context's body (additive)."""
+
+    def __init__(self, ctx: TracedContext):
+        self.ctx = ctx
+        self.tainted: Set[str] = set(ctx.tainted)
+        if ctx.parent is not None:
+            self.tainted |= ctx.parent.tainted
+
+    # -- expression query ---------------------------------------------------
+    def expr_tainted(self, node: ast.AST) -> bool:
+        """Does evaluating ``node`` read a traced value (modulo the
+        static accessors)?"""
+        for sub in self._walk(node):
+            if isinstance(sub, ast.Name) and sub.id in self.tainted:
+                return True
+        return False
+
+    def _walk(self, node: ast.AST):
+        """ast.walk that does not descend past static accessors or into
+        nested function bodies (children are analyzed as their own
+        contexts)."""
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            if isinstance(n, ast.Attribute) and n.attr in STATIC_ATTRS:
+                continue
+            yield n
+            if isinstance(n, FUNC_NODES) and n is not node:
+                continue
+            stack.extend(ast.iter_child_nodes(n))
+
+    # -- statement-level propagation ---------------------------------------
+    def _target_names(self, target: ast.AST) -> Set[str]:
+        out: Set[str] = set()
+        for sub in ast.walk(target):
+            if isinstance(sub, ast.Name):
+                out.add(sub.id)
+        return out
+
+    def propagate(self) -> None:
+        """Run assignment propagation over the context body to fixpoint
+        (bounded — the tainted set only grows)."""
+        body = self.ctx.node.body
+        stmts = body if isinstance(body, list) else [ast.Expr(body)]
+        for _ in range(8):
+            before = len(self.tainted)
+            for stmt in stmts:
+                self._visit_stmts(stmt)
+            if len(self.tainted) == before:
+                break
+
+    def _visit_stmts(self, stmt: ast.AST) -> None:
+        for node in ast.walk(stmt):
+            if isinstance(node, FUNC_NODES):
+                continue
+            if isinstance(node, ast.Assign):
+                if self.expr_tainted(node.value):
+                    for t in node.targets:
+                        self.tainted |= self._target_names(t)
+            elif isinstance(node, ast.AugAssign):
+                if self.expr_tainted(node.value) \
+                        or self.expr_tainted(node.target):
+                    self.tainted |= self._target_names(node.target)
+            elif isinstance(node, ast.AnnAssign) and node.value is not None:
+                if self.expr_tainted(node.value):
+                    self.tainted |= self._target_names(node.target)
+            elif isinstance(node, ast.For):
+                if self.expr_tainted(node.iter):
+                    self.tainted |= self._target_names(node.target)
+            elif isinstance(node, (ast.withitem,)):
+                if node.optional_vars is not None \
+                        and self.expr_tainted(node.context_expr):
+                    self.tainted |= self._target_names(node.optional_vars)
+            elif isinstance(node, ast.NamedExpr):
+                if self.expr_tainted(node.value):
+                    self.tainted |= self._target_names(node.target)
+            elif isinstance(node, (ast.comprehension,)):
+                if self.expr_tainted(node.iter):
+                    self.tainted |= self._target_names(node.target)
+
+
+def expand_contexts(roots: List[TracedContext]) -> List[TracedContext]:
+    """Roots + their nested function contexts, each with propagated
+    taint (parents before children, so closures inherit)."""
+    out: List[TracedContext] = []
+    work = list(roots)
+    seen = {id(c.node) for c in roots}
+    while work:
+        ctx = work.pop(0)
+        env = TaintEnv(ctx)
+        env.propagate()
+        ctx.tainted = env.tainted
+        out.append(ctx)
+        for node in ast.walk(ctx.node):
+            if node is ctx.node or not isinstance(node, FUNC_NODES):
+                continue
+            if id(node) in seen:
+                continue
+            # direct child only (grandchildren queue via their parent)
+            if _enclosing_func(ctx.node, node) is ctx.node:
+                seen.add(id(node))
+                child = TracedContext(
+                    node=node, name=getattr(node, "name", "<lambda>"),
+                    reason=f"nested in {ctx.name} ({ctx.reason})",
+                    statics=set(), parent=ctx)
+                child.tainted = set(_param_names(node))
+                work.append(child)
+    return out
+
+
+def _enclosing_func(root: FuncNode, target: ast.AST) -> Optional[ast.AST]:
+    """The innermost function node of ``root``'s tree that strictly
+    contains ``target``."""
+    result: List[ast.AST] = [root]
+
+    def descend(node: ast.AST, owner: ast.AST) -> bool:
+        for child in ast.iter_child_nodes(node):
+            if child is target:
+                result[0] = owner
+                return True
+            next_owner = child if isinstance(child, FUNC_NODES) else owner
+            if descend(child, next_owner):
+                return True
+        return False
+
+    descend(root, root)
+    return result[0]

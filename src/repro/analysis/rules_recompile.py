@@ -1,0 +1,242 @@
+"""NL2xx recompile hazards: jit keys must be shapes + declared statics.
+
+The PR 7/8 warm path (Session pow2 buckets, the persistent compile
+cache, Router prewarm) is only warm if calling the same logical plan
+twice hits the same executable.  Three ways the codebase has broken (or
+nearly broken) that:
+
+  NL201  ``jax.jit(...)`` called inside a function body with no
+         memoization: a fresh ``jit`` wrapper per call means a fresh
+         trace per call (the ``distributed._jitted_decomposition``
+         docstring records fixing exactly this; its
+         ``functools.lru_cache`` wrapper is the sanctioned pattern and
+         is exempt).  Module-level ``_fn = jax.jit(f)`` is fine.
+  NL202  value-varying capture inside a traced body or a warm-path key
+         function: ``time.*()``, ``random.*``, ``np.random.*``,
+         ``os.environ`` / ``os.getenv``, ``datetime.now`` — the value is
+         baked at trace time (trace body) or varies the cache key per
+         call (key function).  Warm-path key functions are the
+         ``key`` / ``bucket`` / ``canonical`` / ``plan`` -named
+         functions of ``core/session.py`` and ``serve/cache.py``.
+  NL203  unhashable literal (list / dict / set display) passed for a
+         parameter that some same-module jit declares in
+         ``static_argnames`` — statics are hashed into the jit key, so
+         this raises at call time (or, with a mutable default on the
+         decorated def itself, whenever the default is used).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set
+
+from .driver import Module, Project
+from .findings import Finding
+from .jaxast import (FUNC_NODES, dotted_name, expand_contexts,
+                     find_traced_contexts, is_jit_name,
+                     jit_decorator_statics)
+
+CATALOG = [
+    ("NL201", "jax.jit called per-invocation inside a function body "
+              "without memoization (fresh trace every call)"),
+    ("NL202", "value-varying capture (time/random/os.environ) inside a "
+              "traced body or warm-path key function"),
+    ("NL203", "unhashable literal bound to a declared static_argnames "
+              "parameter"),
+]
+
+_MEMO_DECORATORS = {"lru_cache", "cache", "cached_property"}
+_VARYING_CALLS = {
+    "time.time", "time.monotonic", "time.perf_counter", "time.time_ns",
+    "os.getenv", "os.urandom", "uuid.uuid4", "id",
+}
+_VARYING_PREFIXES = ("random.", "np.random.", "numpy.random.",
+                     "secrets.", "datetime.datetime.now",
+                     "datetime.date.today")
+_WARM_FILES = ("core/session.py", "serve/cache.py")
+_KEY_NAME_PARTS = ("key", "bucket", "canonical", "plan")
+_UNHASHABLE = (ast.List, ast.Dict, ast.Set, ast.DictComp, ast.SetComp,
+               ast.ListComp)
+
+
+def _is_memoized(func: ast.AST) -> bool:
+    for dec in getattr(func, "decorator_list", []):
+        name = dotted_name(dec if not isinstance(dec, ast.Call)
+                           else dec.func)
+        if name and name.split(".")[-1] in _MEMO_DECORATORS:
+            return True
+    return False
+
+
+def _enclosing_functions(tree: ast.Module):
+    """Yield (func_node, node) for every node with its innermost
+    enclosing function (module-level nodes are skipped)."""
+    def walk(node, owner):
+        for child in ast.iter_child_nodes(node):
+            next_owner = owner
+            if isinstance(child, FUNC_NODES):
+                next_owner = child
+            elif owner is not None:
+                yield owner, child
+            yield from walk(child, next_owner)
+    yield from walk(tree, None)
+
+
+def _varying_reason(node: ast.AST) -> str:
+    """Non-empty description when ``node`` reads a value-varying
+    source."""
+    if isinstance(node, ast.Call):
+        name = dotted_name(node.func)
+        if name:
+            if name in _VARYING_CALLS:
+                return f"{name}()"
+            if any(name.startswith(p) for p in _VARYING_PREFIXES):
+                return f"{name}()"
+    name = dotted_name(node)
+    if name and (name == "os.environ" or name.startswith("os.environ.")):
+        return "os.environ"
+    return ""
+
+
+def check(module: Module, project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    findings.extend(_check_jit_per_call(module))
+    findings.extend(_check_varying(module))
+    findings.extend(_check_statics(module))
+    return findings
+
+
+def _check_jit_per_call(module: Module) -> List[Finding]:
+    out: List[Finding] = []
+    for owner, node in _enclosing_functions(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if not is_jit_name(dotted_name(node.func)):
+            continue
+        if _is_memoized(owner):
+            continue
+        fn_name = getattr(owner, "name", "<lambda>")
+        target = dotted_name(node.args[0]) if node.args else None
+        what = f"jax.jit({target})" if target else "jax.jit(...)"
+        out.append(Finding(
+            path=module.path, line=node.lineno, col=node.col_offset,
+            rule="NL201",
+            message=f"{what} constructed inside {fn_name}() — fresh "
+                    f"trace on every call",
+            hint="hoist to module level, or memoize the wrapper with "
+                 "functools.lru_cache (see "
+                 "core/distributed._jitted_decomposition)"))
+    return out
+
+
+def _check_varying(module: Module) -> List[Finding]:
+    out: List[Finding] = []
+    # (a) inside traced bodies: the value is frozen at trace time
+    contexts = expand_contexts(find_traced_contexts(module.tree))
+    seen: Set[int] = set()
+    for ctx in contexts:
+        for node in ast.walk(ctx.node):
+            if id(node) in seen:
+                continue
+            reason = _varying_reason(node)
+            if reason:
+                seen.add(id(node))
+                out.append(Finding(
+                    path=module.path, line=node.lineno,
+                    col=node.col_offset, rule="NL202",
+                    message=f"value-varying capture {reason} inside "
+                            f"traced {ctx.name} ({ctx.reason})",
+                    hint="the value is baked into the trace at compile "
+                         "time; pass it as an argument instead"))
+    # (b) warm-path key functions: the key must be a pure function of
+    # shapes + declared statics
+    if module.path.endswith(_WARM_FILES):
+        for func in ast.walk(module.tree):
+            if not isinstance(func, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            if not any(p in func.name.lower() for p in _KEY_NAME_PARTS):
+                continue
+            for node in ast.walk(func):
+                if id(node) in seen:
+                    continue
+                reason = _varying_reason(node)
+                if reason:
+                    seen.add(id(node))
+                    out.append(Finding(
+                        path=module.path, line=node.lineno,
+                        col=node.col_offset, rule="NL202",
+                        message=f"value-varying {reason} in warm-path "
+                                f"key function {func.name}()",
+                        hint="jit/cache keys must depend only on shapes "
+                             "and declared statics or the warm pool "
+                             "never hits"))
+    return out
+
+
+def _declared_statics(module: Module) -> Dict[str, Set[str]]:
+    """function name -> its jit-declared static parameter names."""
+    out: Dict[str, Set[str]] = {}
+    for node in ast.walk(module.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for dec in node.decorator_list:
+            statics = jit_decorator_statics(dec)
+            if statics:
+                out[node.name] = statics
+    return out
+
+
+def _check_statics(module: Module) -> List[Finding]:
+    out: List[Finding] = []
+    statics_by_fn = _declared_statics(module)
+    # mutable default on a static parameter of the decorated def itself
+    for node in ast.walk(module.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        statics = statics_by_fn.get(node.name)
+        if not statics:
+            continue
+        args = node.args
+        pos = args.posonlyargs + args.args
+        for arg, default in zip(pos[len(pos) - len(args.defaults):],
+                                args.defaults):
+            if arg.arg in statics and isinstance(default, _UNHASHABLE):
+                out.append(Finding(
+                    path=module.path, line=default.lineno,
+                    col=default.col_offset, rule="NL203",
+                    message=f"unhashable default for static parameter "
+                            f"{arg.arg!r} of {node.name}()",
+                    hint="statics are hashed into the jit key; use a "
+                         "tuple / frozenset / None sentinel"))
+        for arg, default in zip(args.kwonlyargs, args.kw_defaults):
+            if default is not None and arg.arg in statics \
+                    and isinstance(default, _UNHASHABLE):
+                out.append(Finding(
+                    path=module.path, line=default.lineno,
+                    col=default.col_offset, rule="NL203",
+                    message=f"unhashable default for static parameter "
+                            f"{arg.arg!r} of {node.name}()",
+                    hint="statics are hashed into the jit key; use a "
+                         "tuple / frozenset / None sentinel"))
+    if not statics_by_fn:
+        return out
+    # unhashable literal at a call site, bound by keyword to a static
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = dotted_name(node.func)
+        if not callee:
+            continue
+        statics = statics_by_fn.get(callee.split(".")[-1])
+        if not statics:
+            continue
+        for kw in node.keywords:
+            if kw.arg in statics and isinstance(kw.value, _UNHASHABLE):
+                out.append(Finding(
+                    path=module.path, line=kw.value.lineno,
+                    col=kw.value.col_offset, rule="NL203",
+                    message=f"unhashable literal for static parameter "
+                            f"{kw.arg!r} in call to {callee}()",
+                    hint="statics are hashed into the jit key; pass a "
+                         "tuple / frozenset instead"))
+    return out

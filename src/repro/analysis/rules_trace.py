@@ -1,0 +1,127 @@
+"""NL1xx trace hygiene: no host syncs inside traced bodies.
+
+The PR 1–2 bug class: ``bool(mask.any())`` inside what became the
+compiled peel loop forced a device sync per round and, worse, silently
+baked the *first call's* value into the trace.  Inside a traced context
+(see ``jaxast``) a value reachable from a traced parameter must never
+flow into a Python-level consumer:
+
+  NL101  host-sync call — ``bool()`` / ``int()`` / ``float()`` /
+         ``complex()`` / ``.item()`` / ``.tolist()`` / ``np.asarray()``
+         / ``np.array()`` on a traced value.  Under ``jax.jit`` these
+         raise ``TracerConversionError`` at trace time; inside a
+         ``lax.while_loop`` body reached through other jit code they can
+         instead silently constant-fold.  Either way the code is wrong.
+  NL102  Python control flow — ``if`` / ``while`` / ``assert`` (or a
+         ternary) testing a traced value; the branch is resolved once at
+         trace time, not per element.  Use ``jnp.where`` / ``lax.cond``.
+  NL103  ``len()`` on a traced value.  Legal (returns the static leading
+         dim) but misleading next to NL101's genuine syncs — prefer the
+         explicitly-static ``x.shape[0]``.
+
+``.shape`` / ``.ndim`` / ``.dtype`` accesses launder taint (static under
+tracing), and ``static_argnames`` parameters never seed it, so the
+engine's ``if spec is not None and fused:`` idiom stays clean.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .driver import Module, Project
+from .findings import Finding
+from .jaxast import (FUNC_NODES, TaintEnv, dotted_name, expand_contexts,
+                     find_traced_contexts)
+
+CATALOG = [
+    ("NL101", "host-sync call (bool/int/float/.item/np.asarray) on a "
+              "traced value inside a traced context"),
+    ("NL102", "Python if/while/assert on a traced value inside a traced "
+              "context"),
+    ("NL103", "len() on a traced value (static but misleading; use "
+              ".shape[0])"),
+]
+
+_SYNC_BUILTINS = {"bool", "int", "float", "complex"}
+_SYNC_METHODS = {"item", "tolist", "__bool__", "__index__"}
+_SYNC_NP = {"asarray", "array", "asanyarray"}
+_NP_MODULES = {"np", "numpy", "onp"}
+
+
+def _own_nodes(func_node):
+    """Walk a context body without descending into nested functions
+    (those are separate contexts with their own taint)."""
+    stack = list(ast.iter_child_nodes(func_node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if isinstance(n, FUNC_NODES):
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+
+
+def check(module: Module, project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    contexts = expand_contexts(find_traced_contexts(module.tree))
+    for ctx in contexts:
+        env = TaintEnv(ctx)        # taint already propagated by expand
+        where = f"in {ctx.name} ({ctx.reason})"
+        for node in _own_nodes(ctx.node):
+            if isinstance(node, ast.Call):
+                f = _check_call(module, env, node, where)
+                if f:
+                    findings.append(f)
+            elif isinstance(node, (ast.If, ast.While, ast.Assert,
+                                   ast.IfExp)):
+                test = node.test
+                if env.expr_tainted(test):
+                    kind = type(node).__name__.lower().replace("exp", "-expr")
+                    findings.append(Finding(
+                        path=module.path, line=test.lineno,
+                        col=test.col_offset, rule="NL102",
+                        message=f"Python {kind} on traced value {where}",
+                        hint="branch resolves once at trace time; use "
+                             "jnp.where / lax.cond / lax.while_loop"))
+    return findings
+
+
+def _check_call(module: Module, env: TaintEnv, node: ast.Call,
+                where: str) -> Finding | None:
+    fn = node.func
+    name = dotted_name(fn)
+    # x.item() / x.tolist() — sync iff the receiver is traced
+    if isinstance(fn, ast.Attribute) and fn.attr in _SYNC_METHODS:
+        if env.expr_tainted(fn.value):
+            return Finding(
+                path=module.path, line=node.lineno, col=node.col_offset,
+                rule="NL101",
+                message=f".{fn.attr}() on traced value {where}",
+                hint="device sync under trace; keep the value on device "
+                     "or hoist it out of the traced region")
+    if not node.args:
+        return None
+    arg = node.args[0]
+    if name in _SYNC_BUILTINS and env.expr_tainted(arg):
+        return Finding(
+            path=module.path, line=node.lineno, col=node.col_offset,
+            rule="NL101",
+            message=f"{name}() on traced value {where}",
+            hint="raises TracerConversionError under jit; use jnp ops "
+                 "(jnp.where, .astype) instead of host conversion")
+    if name and "." in name:
+        head, _, last = name.rpartition(".")
+        if head in _NP_MODULES and last in _SYNC_NP \
+                and env.expr_tainted(arg):
+            return Finding(
+                path=module.path, line=node.lineno, col=node.col_offset,
+                rule="NL101",
+                message=f"{name}() on traced value {where}",
+                hint="materializes the array on host; use jnp.asarray or "
+                     "move the conversion outside the traced region")
+    if name == "len" and env.expr_tainted(arg):
+        return Finding(
+            path=module.path, line=node.lineno, col=node.col_offset,
+            rule="NL103",
+            message=f"len() on traced value {where}",
+            hint="static but reads like a sync; prefer x.shape[0]")
+    return None

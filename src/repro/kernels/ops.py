@@ -55,7 +55,9 @@ def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     qp, pq = _pad_to(q, 2, block_q)
     kp, pk = _pad_to(k, 2, block_k)
     vp, _ = _pad_to(v, 2, block_k)
-    if pk:
+    # pk is the static pad amount (shape arithmetic), not a tracer — the
+    # taint analysis can't see through _pad_to's return value
+    if pk:  # nucleuslint: disable=NL102
         # disable padded keys by pushing them outside the causal horizon; for
         # non-causal, mask via a huge negative on k rows is handled by zero
         # value rows + renormalization being exact only when causal. Callers

@@ -1,0 +1,33 @@
+"""NL2xx fixture (named core/session.py so the warm-path key rule
+applies).  Line numbers are pinned in tests/test_analysis.py — KEEP THEM
+STABLE (append only).  Never imported or executed.
+"""
+import os
+import time
+from functools import partial
+
+import jax
+
+
+def run_per_call(fn, x):
+    step = jax.jit(fn)                  # line 13: NL201 jit per call
+    return step(x)
+
+
+@jax.jit
+def bakes_time(x):
+    return x + time.time()              # line 19: NL202 traced capture
+
+
+def bucket_key(problem):
+    salt = os.getenv("SALT")            # line 23: NL202 warm-path key
+    return (problem.n_s, salt)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def bad_static_default(x, spec=[1, 2]):  # line 28: NL203 mutable default
+    return x
+
+
+def caller(x):
+    return bad_static_default(x, spec=[3, 4])   # line 33: NL203 literal

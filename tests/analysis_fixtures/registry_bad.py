@@ -1,0 +1,46 @@
+"""NL4xx fixture: a registered backend touching an undeclared knob.
+
+Line numbers are pinned in tests/test_analysis.py — KEEP THEM STABLE
+(append only).  Never imported or executed; register/_Registered/
+BackendCapabilities are matched structurally by the rule, not imported.
+"""
+
+
+def register(backend):
+    return backend
+
+
+class _Registered:
+    pass
+
+
+class BackendCapabilities:
+    pass
+
+
+def _run_shared(problem, config):
+    if config.compress:                  # line 22: NL401 via helper
+        return problem
+    return problem
+
+
+def _run_quiet(problem, config):
+    # reads only its declared knob: clean
+    return _run_shared(problem, config) if config.mesh else problem
+
+
+def _run_loud(problem, config):
+    if config.use_pallas:                # line 33: NL401 undeclared
+        return problem
+    return problem
+
+
+register(_Registered(
+    name="quiet",
+    capabilities=BackendCapabilities(knobs=frozenset({"mesh"})),
+    _run=_run_quiet))
+
+register(_Registered(
+    name="loud",
+    capabilities=BackendCapabilities(knobs=frozenset()),
+    _run=_run_loud))

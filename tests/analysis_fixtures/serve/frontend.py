@@ -1,0 +1,34 @@
+"""NL3xx fixture (named serve/frontend.py so the single-writer rule
+applies).  Line numbers are pinned in tests/test_analysis.py — KEEP THEM
+STABLE (append only).  Never imported or executed.
+"""
+import threading
+
+
+class Frontend:
+    def __init__(self, router):
+        self.router = router
+        self._stats_lock = threading.Lock()
+        self.stats = {"served": 0}
+        self.queue_depth = 0            # __init__ writes are exempt
+
+    def _count(self, name, by=1):
+        with self._stats_lock:
+            self.stats[name] += by      # seeds the guard convention
+
+    def unguarded(self):
+        self.stats["served"] = 0        # line 20: NL301 no lock held
+
+    def submit(self, request):
+        dec = self.router.route_many([request])   # line 23: NL302
+        self._count("served")
+        return dec
+
+    def _run(self):
+        # the worker thread may drive the engine: no finding here
+        return self.router.route_many([])
+
+    def _serve_batch(self, batch):
+        self.router.update("a", None)   # worker method: clean
+        with self._stats_lock:
+            self.stats["served"] += len(batch)

@@ -1,0 +1,50 @@
+"""NL1xx fixture: host syncs + Python control flow inside traced bodies.
+
+Deliberately-bad snippets for tests/test_analysis.py — each violation's
+line number is pinned there, so KEEP LINE NUMBERS STABLE (append only).
+This file is never imported or executed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from functools import partial
+
+
+@jax.jit
+def sync_in_jit(x):
+    flag = bool(x)                      # line 15: NL101 bool()
+    val = x.item()                      # line 16: NL101 .item()
+    host = np.asarray(x)                # line 17: NL101 np.asarray()
+    n = len(x)                          # line 18: NL103 len()
+    if x > 0:                           # line 19: NL102 if
+        return x + n
+    return x * (flag + val + host.sum())
+
+
+def outer(a, b):
+    def body(carry):
+        i, acc = carry
+        while acc < 10:                 # line 27: NL102 while (loop body)
+            acc = acc + 1
+        return (i + 1, acc)
+
+    def cond(carry):
+        return carry[0] < 8
+
+    return jax.lax.while_loop(cond, body, (a, b))
+
+
+@partial(jax.jit, static_argnames=("k",))
+def statics_are_clean(x, k):
+    # k is declared static: branching on it is legal, no finding here
+    if k > 2:
+        return x * k
+    n = x.shape[0]
+    if n > 4:                           # shape access is static: clean
+        return x[: n // 2]
+    return x
+
+
+@jax.jit
+def suppressed_sync(x):
+    return bool(x)                      # nucleuslint: disable=NL101

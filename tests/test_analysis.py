@@ -1,0 +1,206 @@
+"""nucleuslint: golden-finding fixtures, suppression/baseline round-trip,
+and the clean-run-modulo-baseline gate (ISSUE 9 / DESIGN.md §12).
+
+The fixture files under tests/analysis_fixtures/ pin (rule, line) pairs:
+each rule family must catch its deliberately-bad snippet at exactly the
+recorded location, and the clean snippets (static args, shape access,
+worker methods, __init__ writes, declared knobs) must stay finding-free.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (Finding, apply_baseline, dead_module_report,
+                            load_baseline, load_project, run_analysis,
+                            write_baseline)
+from repro.analysis.baseline import DEFAULT_BASELINE
+from repro.analysis.findings import parse_suppressions
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "tests", "analysis_fixtures")
+
+
+def fixture_findings(*names):
+    paths = [os.path.join(FIXTURES, n) for n in names] if names \
+        else [FIXTURES]
+    project = load_project(paths, root=REPO)
+    return run_analysis(project)
+
+
+def pairs(findings):
+    return sorted((f.rule, f.line) for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# golden findings: one fixture per rule family, pinned rule ids + lines
+# ---------------------------------------------------------------------------
+
+def test_trace_family_catches_fixture():
+    got = pairs(fixture_findings("trace_bad.py"))
+    assert got == [
+        ("NL101", 15),   # bool()
+        ("NL101", 16),   # .item()
+        ("NL101", 17),   # np.asarray()
+        ("NL102", 19),   # if on traced
+        ("NL102", 27),   # while inside lax.while_loop body
+        ("NL103", 18),   # len() on traced
+    ]
+
+
+def test_recompile_family_catches_fixture():
+    got = pairs(fixture_findings(os.path.join("core", "session.py")))
+    assert got == [
+        ("NL201", 13),   # jax.jit per call
+        ("NL202", 19),   # time.time() baked into a trace
+        ("NL202", 23),   # os.getenv in a warm-path key function
+        ("NL203", 28),   # mutable default on a static param
+        ("NL203", 33),   # unhashable literal at a call site
+    ]
+
+
+def test_concurrency_family_catches_fixture():
+    got = pairs(fixture_findings(os.path.join("serve", "frontend.py")))
+    assert got == [
+        ("NL301", 20),   # unguarded write to a lock-guarded attribute
+        ("NL302", 23),   # engine entry outside the worker
+    ]
+
+
+def test_registry_family_catches_fixture():
+    got = pairs(fixture_findings("registry_bad.py"))
+    assert got == [
+        ("NL401", 22),   # undeclared knob read via forwarded helper
+        ("NL401", 33),   # undeclared knob read in the adapter itself
+    ]
+
+
+def test_clean_snippets_stay_clean():
+    """The negative space is as load-bearing as the positives: statics,
+    shape access, __init__ writes, worker methods, declared knobs."""
+    findings = fixture_findings()
+    msgs = [f.message for f in findings]
+    assert not any("statics_are_clean" in m for m in msgs)
+    assert not any("suppressed_sync" in m for m in msgs)
+    assert not any("_run_quiet" in m and "mesh" in m for m in msgs)
+    by_rule_file = {(f.rule, f.path, f.line) for f in findings}
+    # __init__ writes and worker-method engine calls never fire
+    assert all(l not in (13, 29, 32)
+               for r, p, l in by_rule_file if r in ("NL301", "NL302")
+               and p.endswith("serve/frontend.py"))
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_inline_suppression_silences_finding():
+    # trace_bad.py's suppressed_sync has a bool() with an inline disable:
+    # it must NOT appear (covered above), while the same pattern without
+    # the comment (line 15) does.
+    got = pairs(fixture_findings("trace_bad.py"))
+    assert ("NL101", 15) in got
+    assert all(line < 40 for _r, line in got)
+
+
+def test_suppression_parser_semantics():
+    sup = parse_suppressions([
+        "x = 1",
+        "y = 2  # nucleuslint: disable=NL101,NL102",
+        "z = 3",
+        "# nucleuslint: disable=all",
+        "w = 4",
+    ])
+    assert sup[2] == frozenset({"NL101", "NL102"})
+    assert sup[3] == frozenset({"NL101", "NL102"})   # next-line coverage
+    assert sup[4] == frozenset({"all"}) and sup[5] == frozenset({"all"})
+    assert 1 not in sup
+
+
+# ---------------------------------------------------------------------------
+# baseline round-trip
+# ---------------------------------------------------------------------------
+
+def test_baseline_round_trip(tmp_path):
+    findings = fixture_findings("trace_bad.py")
+    assert findings
+    path = str(tmp_path / "baseline.json")
+    write_baseline(findings, path)
+    baseline = load_baseline(path)
+    new, stale = apply_baseline(findings, baseline)
+    assert new == [] and stale == []
+    # a novel finding is NOT absorbed
+    extra = Finding(path="x.py", line=1, col=0, rule="NL101",
+                    message="novel", hint="")
+    new, _ = apply_baseline(findings + [extra], baseline)
+    assert new == [extra]
+    # fixing one of two identical findings frees a slot -> stale entry
+    dup = [findings[0], findings[0]]
+    write_baseline(dup, path)
+    new, stale = apply_baseline([findings[0]], load_baseline(path))
+    assert new == [] and stale == [findings[0].key]
+
+
+def test_baseline_rejects_foreign_json(tmp_path):
+    path = tmp_path / "not_baseline.json"
+    path.write_text(json.dumps({"format": "something-else"}))
+    with pytest.raises(ValueError):
+        load_baseline(str(path))
+
+
+def test_missing_baseline_is_empty(tmp_path):
+    assert load_baseline(str(tmp_path / "absent.json")) == {}
+
+
+# ---------------------------------------------------------------------------
+# the gate: src/repro is clean modulo the committed baseline
+# ---------------------------------------------------------------------------
+
+def test_src_repro_clean_modulo_committed_baseline():
+    project = load_project([os.path.join(REPO, "src", "repro")], root=REPO)
+    findings = run_analysis(project)
+    baseline = load_baseline(os.path.join(REPO, DEFAULT_BASELINE))
+    new, _stale = apply_baseline(findings, baseline)
+    assert new == [], "new nucleuslint findings:\n" + "\n".join(
+        f.render() for f in new)
+
+
+def test_cli_gate_matches_library(tmp_path):
+    """`python -m repro.analysis` (what make lint-nucleus runs) exits 0
+    on the committed baseline and writes well-formed JSON."""
+    out = tmp_path / "findings.json"
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src/repro",
+         "--json", str(out)],
+        cwd=REPO, capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    blob = json.loads(out.read_text())
+    assert blob["tool"] == "nucleuslint" and blob["n_new"] == 0
+
+
+# ---------------------------------------------------------------------------
+# dead-module report
+# ---------------------------------------------------------------------------
+
+def test_dead_module_report_shape():
+    os.chdir(REPO)
+    rep = dead_module_report("src")
+    assert rep["n_modules"] > 50
+    assert rep["n_reachable"] <= rep["n_modules"]
+    # the nucleus product reaches the engine...
+    assert "repro.core.engine" not in rep["dead"]
+    assert "repro.serve.frontend" not in rep["dead"]
+    # ...and this test file importing repro.analysis keeps the linter
+    # itself alive under the spec roots (tests count)
+    assert "repro.analysis.driver" not in rep["dead"]
+    # the nucleus-only view surfaces the LLM-era lanes
+    assert "repro.launch.train" in rep["nucleus_unreachable"]
+    assert any("repro.configs" in m for m in rep["nucleus_unreachable"])
+    # every dead entry maps to a real file (report only, no deletions)
+    for p in rep["dead_paths"]:
+        assert os.path.exists(os.path.join(REPO, p))
