@@ -32,10 +32,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from functools import lru_cache
+
 from ..configs import get_arch
 from ..models import transformer as T
 from ..models import din as DIN
 from . import steps as S
+
+
+# Step factories are memoized at module level (nucleuslint NL201): building
+# `jax.jit(partial(step, cfg=...))` inside the driver body made every driver
+# invocation re-trace the step — the same hazard class
+# core/distributed._jitted_decomposition fixed for the sharded callable.
+# The configs are frozen dataclasses, so they key an lru_cache directly.
+
+@lru_cache(maxsize=16)
+def _decode_step_fn(cfg):
+    return jax.jit(partial(S.lm_decode_step, cfg=cfg))
+
+
+@lru_cache(maxsize=16)
+def _din_serve_step_fn(cfg):
+    return jax.jit(partial(S.din_serve_step, cfg=cfg))
 
 
 def serve_lm(arch_id: str, n_requests: int = 16, batch_slots: int = 4,
@@ -49,7 +67,7 @@ def serve_lm(arch_id: str, n_requests: int = 16, batch_slots: int = 4,
     queue: List[np.ndarray] = [
         rng.integers(0, cfg.vocab, prompt_len).astype(np.int32)
         for _ in range(n_requests)]
-    decode = jax.jit(partial(S.lm_decode_step, cfg=cfg))
+    decode = _decode_step_fn(cfg)
 
     cache = T.init_cache(cfg, batch_slots, max_len)
     # slot state (host): current length per slot, tokens emitted
@@ -103,7 +121,7 @@ def serve_din(n_batches: int = 8, batch: int = 512, smoke: bool = True,
     stream = RecsysStream(RecsysStreamConfig(
         n_items=cfg.n_items, n_cates=cfg.n_cates, n_users=cfg.n_user_feats,
         seq_len=cfg.seq_len, batch=batch))
-    step = jax.jit(partial(S.din_serve_step, cfg=cfg))
+    step = _din_serve_step_fn(cfg)
     t0 = time.time()
     scores = []
     for i in range(n_batches):

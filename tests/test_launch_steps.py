@@ -1,0 +1,47 @@
+"""Regression tests for the NL201 recompile hazards nucleuslint surfaced
+in the launch drivers (ISSUE 9): `launch/serve.py` and `launch/train.py`
+rebuilt `jax.jit(partial(step, cfg=...))` on every driver invocation, so
+a second call to the same driver re-traced the whole step.  The fix is
+the `core/distributed._jitted_decomposition` pattern — module-level
+`functools.lru_cache` factories keyed on the (hashable, frozen) configs.
+
+These tests pin (a) the memoization — same config twice returns the SAME
+compiled wrapper, different configs don't collide — and (b) that the
+linter stays clean on the fixed files, so the hazard can't silently come
+back.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.analysis import load_project, run_analysis
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _nl201(path_suffix: str):
+    project = load_project(
+        [os.path.join(REPO, "src", "repro", "launch")], root=REPO)
+    return [f for f in run_analysis(project)
+            if f.rule == "NL201" and f.path.endswith(path_suffix)]
+
+
+# ---------------------------------------------------------------------------
+# serve.py: decode / DIN scoring step factories
+# ---------------------------------------------------------------------------
+
+def test_serve_step_factories_are_memoized():
+    from repro.configs import get_arch
+    from repro.launch.serve import _decode_step_fn, _din_serve_step_fn
+
+    cfg = get_arch("minicpm-2b").make_smoke_config()
+    assert _decode_step_fn(cfg) is _decode_step_fn(cfg)
+    din = get_arch("din").make_smoke_config()
+    assert _din_serve_step_fn(din) is _din_serve_step_fn(din)
+    # distinct configs must not collide in the cache
+    other = get_arch("stablelm-12b").make_smoke_config()
+    assert _decode_step_fn(cfg) is not _decode_step_fn(other)
+
+
+def test_serve_py_has_no_jit_per_call_findings():
+    assert _nl201("launch/serve.py") == []
