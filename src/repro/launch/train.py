@@ -18,6 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from functools import lru_cache
+
 from ..configs import get_arch
 from ..data import TokenStream, TokenStreamConfig, RecsysStream, RecsysStreamConfig
 from ..checkpoint import CheckpointManager
@@ -34,6 +36,26 @@ class TrainRun:
     losses: list
     steps_done: int
     restored_from: Optional[int]
+
+
+# Train-step factories are memoized at module level (nucleuslint NL201):
+# building `jax.jit(partial(step, cfg=...))` inside the driver body made
+# every driver invocation — e.g. the restore-resume test's three train_lm
+# calls — re-trace the step.  Same fix class as
+# core/distributed._jitted_decomposition; the configs are frozen
+# dataclasses, so they key an lru_cache directly.
+
+@lru_cache(maxsize=16)
+def _lm_train_step_fn(cfg, opt_cfg, n_micro):
+    if n_micro > 1:
+        return jax.jit(partial(S.lm_train_step_microbatched, cfg=cfg,
+                               opt_cfg=opt_cfg, n_micro=n_micro))
+    return jax.jit(partial(S.lm_train_step, cfg=cfg, opt_cfg=opt_cfg))
+
+
+@lru_cache(maxsize=16)
+def _din_train_step_fn(cfg, opt_cfg):
+    return jax.jit(partial(S.din_train_step, cfg=cfg, opt_cfg=opt_cfg))
 
 
 def train_lm(arch_id: str, steps: int = 200, smoke: bool = True,
@@ -66,11 +88,7 @@ def train_lm(arch_id: str, steps: int = 200, smoke: bool = True,
         (params, opt_state), start_step, _ = mgr.restore((params, opt_state))
         restored_from = start_step
 
-    if microbatches > 1:
-        step_fn = jax.jit(partial(S.lm_train_step_microbatched, cfg=cfg,
-                                  opt_cfg=opt_cfg, n_micro=microbatches))
-    else:
-        step_fn = jax.jit(partial(S.lm_train_step, cfg=cfg, opt_cfg=opt_cfg))
+    step_fn = _lm_train_step_fn(cfg, opt_cfg, microbatches)
     monitor = StragglerMonitor()
     guard = PreemptionGuard()
     log = HeartbeatLog(f"{ckpt_dir}/heartbeat.jsonl") if ckpt_dir else None
@@ -120,7 +138,7 @@ def train_din(steps: int = 100, smoke: bool = True, batch: int = 256,
     from ..models import din as DIN
     params = DIN.init_params(jax.random.PRNGKey(0), cfg)
     opt_state = adamw.init_state(params)
-    step_fn = jax.jit(partial(S.din_train_step, cfg=cfg, opt_cfg=opt_cfg))
+    step_fn = _din_train_step_fn(cfg, opt_cfg)
     losses = []
     for step in range(steps):
         b = jax.tree.map(jnp.asarray, stream.batch(step))

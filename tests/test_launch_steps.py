@@ -45,3 +45,48 @@ def test_serve_step_factories_are_memoized():
 
 def test_serve_py_has_no_jit_per_call_findings():
     assert _nl201("launch/serve.py") == []
+
+
+# ---------------------------------------------------------------------------
+# train.py: train step factories (lm plain / lm microbatched / din)
+# ---------------------------------------------------------------------------
+
+def test_train_step_factories_are_memoized():
+    from repro.configs import get_arch
+    from repro.launch.train import _din_train_step_fn, _lm_train_step_fn
+    from repro.optim import adamw
+
+    cfg = get_arch("minicpm-2b").make_smoke_config()
+    opt = adamw.AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=30,
+                            schedule="cosine")
+    assert _lm_train_step_fn(cfg, opt, 1) is _lm_train_step_fn(cfg, opt, 1)
+    # microbatch count is part of the key (different traced program)
+    assert _lm_train_step_fn(cfg, opt, 1) is not _lm_train_step_fn(cfg, opt, 2)
+    # a different optimizer schedule is a different step
+    opt2 = adamw.AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=60,
+                             schedule="cosine")
+    assert _lm_train_step_fn(cfg, opt, 1) is not _lm_train_step_fn(cfg, opt2, 1)
+
+    din = get_arch("din").make_smoke_config()
+    opt3 = adamw.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=20,
+                             schedule="cosine", weight_decay=0.0)
+    assert _din_train_step_fn(din, opt3) is _din_train_step_fn(din, opt3)
+
+
+def test_train_din_still_trains_through_cached_step():
+    """Functional check through the memoized factory: two short runs share
+    the cached jitted step and still learn (loss drops)."""
+    from repro.launch.train import _din_train_step_fn, train_din
+
+    before = _din_train_step_fn.cache_info().currsize
+    r1 = train_din(steps=6, smoke=True, batch=64, quiet=True)
+    r2 = train_din(steps=6, smoke=True, batch=64, quiet=True)
+    after = _din_train_step_fn.cache_info()
+    assert r1.steps_done == r2.steps_done == 6
+    assert r1.losses[-1] < r1.losses[0] * 1.5   # sane, not diverging
+    # the second run reused the first run's compiled step
+    assert after.currsize == before + 1 and after.hits >= 1
+
+
+def test_train_py_has_no_jit_per_call_findings():
+    assert _nl201("launch/train.py") == []
