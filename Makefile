@@ -7,12 +7,26 @@
 VERIFY_BUDGET ?= 3300
 FAST_BUDGET ?= 2100
 
-.PHONY: verify verify-fast bench quick-bench regen-golden smoke bench-build \
-	calibrate kernel-tests lint-nucleus
+.PHONY: verify verify-core verify-facade verify-fast bench quick-bench \
+	regen-golden smoke bench-build calibrate kernel-tests lint-nucleus
 
 verify:
 	JAX_PLATFORMS=cpu PYTHONPATH=src timeout $(VERIFY_BUDGET) \
 		python -m pytest -x -q
+
+# the full suite split in two so the facade/golden chunk's long-standing
+# interpreter-teardown segfault (exit 139 AFTER all tests pass — a CPython
+# finalization flake, not a test failure) cannot mask the rest of tier-1:
+# verify-core is everything else and must be green; verify-facade is just
+# the two facade-parity files, isolated so a rerun/triage targets them.
+verify-core:
+	JAX_PLATFORMS=cpu PYTHONPATH=src timeout $(VERIFY_BUDGET) \
+		python -m pytest -x -q \
+		--ignore=tests/test_facade.py --ignore=tests/test_golden.py
+
+verify-facade:
+	JAX_PLATFORMS=cpu PYTHONPATH=src timeout $(VERIFY_BUDGET) \
+		python -m pytest -x -q tests/test_facade.py tests/test_golden.py
 
 # the push lane: everything not marked slow (no subprocess meshes, no
 # hypothesis fuzzing) — CI runs this on every push, the full suite in a

@@ -74,20 +74,29 @@ class NucleusConfig:
       mesh        — jax Mesh for the sharded backend (None = whatever this
                     host has, resolved at decompose() time).
       compress    — int16 + error-feedback delta all-reduce (sharded only).
-      build       — incidence builder: "eager" (one-burst expansion) or
+      build       — incidence builder: "eager" (one-burst expansion),
                     "chunked" (memory-bounded source-vertex chunks +
-                    two-pass count-then-fill assembly; DESIGN.md §7).
-                    Both are bit-identical; chunked bounds peak memory.
-      memory_budget_bytes — chunked-build intermediate-memory budget
-                    (None = a 256 MiB default); sets the chunk size.
-                    With backend='auto' the planner additionally reads it
-                    as the machine's memory ceiling: if the dense engine's
-                    per-round working set would exceed it, the
-                    work-efficient gather backend is preferred (the
-                    resolved plan's reasons name the rule when it fires;
-                    DESIGN.md §8).
+                    two-pass count-then-fill assembly; DESIGN.md §7), or
+                    "sharded" (chunks planned onto shards, per-shard slab
+                    assembly + count-then-fill exchange;
+                    ``repro.distbuild``, DESIGN.md §13).  All three are
+                    bit-identical; chunked/sharded bound peak memory.
+      memory_budget_bytes — chunked/sharded-build intermediate-memory
+                    budget (None = a 256 MiB default); sets the chunk
+                    size.  With backend='auto' the planner additionally
+                    reads it as the machine's memory ceiling: if the dense
+                    engine's per-round working set would exceed it, the
+                    work-efficient gather backend is preferred — and if
+                    the ESTIMATED EAGER BUILD working set exceeds it, the
+                    build itself is upgraded to 'sharded' (multi-device)
+                    or 'chunked' before the incidence structure is
+                    materialized (the resolved plan's reasons name the
+                    rule when it fires; DESIGN.md §8, §13).
       build_chunk_size — explicit source vertices per chunk (overrides the
                     budget-derived size; pins the sparse chunked path).
+      build_shards — sharded-build worker count (None = this process's
+                    ``jax.device_count()``, so build slabs line up with
+                    the peel mesh; build='sharded' only).
     """
 
     r: int = 2
@@ -102,6 +111,7 @@ class NucleusConfig:
     build: str = "eager"
     memory_budget_bytes: Optional[int] = None
     build_chunk_size: Optional[int] = None
+    build_shards: Optional[int] = None
 
     def validate(self) -> "NucleusConfig":
         """Reject unsupported combinations with actionable errors.
@@ -139,23 +149,39 @@ class NucleusConfig:
             raise ConfigError(
                 f"build={self.build!r}; expected one of {BUILDS}")
         if self.memory_budget_bytes is not None:
-            if self.build != "chunked":
+            # the budget sizes the chunked/sharded builders; with
+            # backend='auto' it is ALSO the planner's memory ceiling (and
+            # can upgrade the build itself), so it stays legal there even
+            # with build='eager'
+            if self.build not in ("chunked", "sharded") and \
+                    self.backend != AUTO:
                 raise ConfigError(
-                    "memory_budget_bytes sizes the chunked incidence "
-                    "builder; set build='chunked' or drop the budget")
+                    "memory_budget_bytes sizes the chunked/sharded "
+                    "incidence builders (or guides backend='auto'); set "
+                    "build='chunked'/'sharded', backend='auto', or drop "
+                    "the budget")
             if self.memory_budget_bytes <= 0:
                 raise ConfigError(
                     f"memory_budget_bytes must be positive, got "
                     f"{self.memory_budget_bytes}")
         if self.build_chunk_size is not None:
-            if self.build != "chunked":
+            if self.build not in ("chunked", "sharded"):
                 raise ConfigError(
-                    "build_chunk_size is the chunked builder's chunk; set "
-                    "build='chunked' or drop it")
+                    "build_chunk_size is the chunked/sharded builders' "
+                    "chunk; set build='chunked'/'sharded' or drop it")
             if self.build_chunk_size <= 0:
                 raise ConfigError(
                     f"build_chunk_size must be positive, got "
                     f"{self.build_chunk_size}")
+        if self.build_shards is not None:
+            if self.build != "sharded":
+                raise ConfigError(
+                    "build_shards is the sharded builder's worker count; "
+                    "set build='sharded' or drop it")
+            if self.build_shards <= 0:
+                raise ConfigError(
+                    f"build_shards must be positive, got "
+                    f"{self.build_shards}")
         return self
 
     @classmethod
@@ -598,7 +624,15 @@ def resolve_problem(graph_or_problem,
     """The front doors' shared input prologue: validate the config, build
     the incidence structure from a ``Graph`` (threading every build knob),
     or adopt a prebuilt ``NucleusProblem`` (its (r, s) wins).  Shared by
-    ``decompose()`` and ``Session`` so the build stage cannot drift."""
+    ``decompose()`` and ``Session`` so the build stage cannot drift.
+
+    Build auto-upgrade (DESIGN.md §13): with ``backend='auto'``, a
+    ``memory_budget_bytes``, and the default eager build, the estimated
+    eager expansion working set is compared against the budget BEFORE the
+    build runs; if it does not fit, the build is upgraded to 'sharded'
+    (multi-device — slabs line up with the peel mesh) or 'chunked'
+    (single device).  Output is bit-identical either way, so the upgrade
+    changes peak memory, never results."""
     if isinstance(graph_or_problem, NucleusProblem):
         problem = graph_or_problem
         if (problem.r, problem.s) != (config.r, config.s):
@@ -606,10 +640,21 @@ def resolve_problem(graph_or_problem,
         config.validate()
     else:
         config.validate()
+        if config.backend == AUTO and config.build == "eager" and \
+                config.memory_budget_bytes is not None:
+            import jax
+            from ..distbuild import estimate_eager_build_bytes
+            from .incidence import pick_rank
+            dg, _ = pick_rank(graph_or_problem)
+            if estimate_eager_build_bytes(dg, config.s) > \
+                    config.memory_budget_bytes:
+                upgraded = "sharded" if len(jax.devices()) > 1 else "chunked"
+                config = dataclasses.replace(config, build=upgraded)
         problem = build_problem(
             graph_or_problem, config.r, config.s, build=config.build,
             memory_budget_bytes=config.memory_budget_bytes,
-            chunk_size=config.build_chunk_size)
+            chunk_size=config.build_chunk_size,
+            shards=config.build_shards)
     return problem, config
 
 
@@ -621,9 +666,20 @@ def plan_config(problem: NucleusProblem,
     record (explicit configs get a trivial plan).  Shared by
     ``decompose()`` and ``Session`` so the two front doors cannot drift.
     """
+    stats = problem.build_stats or {}
     plan = backend_registry.resolve_plan(
         config, n_r=problem.n_r, n_s=problem.n_s, n_sub=problem.n_sub,
-        r=problem.r, s=problem.s)
+        r=problem.r, s=problem.s, build=stats.get("build", config.build),
+        eager_build_bytes=stats.get("eager_estimate_bytes"))
+    if stats.get("build") == "sharded":
+        # build telemetry rides the plan reasons so plan_report() (and the
+        # serve report) shows HOW the incidence structure was distributed
+        plan = dataclasses.replace(plan, reasons=plan.reasons + (
+            f"build 'sharded': {stats.get('n_shards')} shards x "
+            f"{stats.get('n_chunks')} chunks "
+            f"(chunks/shard={stats.get('chunks_per_shard')}), "
+            f"work skew {stats.get('skew'):.3f}, "
+            f"exchange {stats.get('exchange_bytes')} B",))
     if (plan.backend, plan.hierarchy) != (config.backend, config.hierarchy):
         config = dataclasses.replace(config, backend=plan.backend,
                                      hierarchy=plan.hierarchy)

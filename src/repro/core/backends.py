@@ -335,7 +335,9 @@ def resolve_plan(config, *, n_r: int, n_s: int, n_sub: int,
                  device_kind: Optional[str] = None,
                  n_devices: Optional[int] = None,
                  r: Optional[int] = None, s: Optional[int] = None,
-                 profile_path: Optional[str] = None) -> Plan:
+                 profile_path: Optional[str] = None,
+                 build: Optional[str] = None,
+                 eager_build_bytes: Optional[int] = None) -> Plan:
     """Resolve ``backend='auto'`` / ``hierarchy='auto'`` to concrete axes.
 
     Problem facts come in as plain ints so the rules are unit-testable;
@@ -346,6 +348,11 @@ def resolve_plan(config, *, n_r: int, n_s: int, n_sub: int,
       1. an explicit backend is kept as-is;
       2. knobs bind: ``mesh``/``compress`` force the sharded collective,
          ``use_pallas`` the dense engine;
+      2b. build facts bind (DESIGN.md §13): a sharded incidence build
+         (``build='sharded'``), or an estimated eager build working set
+         (``eager_build_bytes``) exceeding ``memory_budget_bytes``, on a
+         multi-device host -> sharded (the peel partitions the very
+         s-clique slabs the build produced);
       3. multi-device + enough incidence work (>= the shard crossover
          entries) -> sharded;
       4. a ``memory_budget_bytes`` smaller than the dense engine's
@@ -410,6 +417,19 @@ def resolve_plan(config, *, n_r: int, n_s: int, n_sub: int,
         if backend is None and config.use_pallas:
             backend = pick("dense", "use_pallas=True selects the dense "
                                     "engine's Pallas round megakernel")
+        if backend is None and n_devices > 1 and build == "sharded":
+            backend = pick(
+                "sharded",
+                f"the incidence structure was built sharded over "
+                f"{n_devices} devices; the peel partitions the same "
+                f"s-clique slabs")
+        if backend is None and n_devices > 1 and budget is not None and \
+                eager_build_bytes is not None and eager_build_bytes > budget:
+            backend = pick(
+                "sharded",
+                f"estimated eager build working set ~{eager_build_bytes} B "
+                f"exceeds memory_budget_bytes={budget} on {n_devices} "
+                f"devices: shard the build and the peel together")
         if backend is None and n_devices > 1 and \
                 n_s * n_sub >= shard_min:
             backend = pick(

@@ -66,12 +66,19 @@ def make_sharded_decomposition(mesh: Mesh, n_r: int, n_s_padded: int, C: int,
                                schedule: PeelSchedule,
                                max_rounds: Optional[int] = None,
                                compress: bool = False,
-                               hierarchy: bool = False):
+                               hierarchy: bool = False,
+                               padded: bool = False):
     """Build the jittable distributed decomposition for a mesh.
 
     Returns (fn, in_shardings, out_shardings); fn(inc_rid, deg0) -> (core,
     rounds) — or (core, rounds, parent, L) with hierarchy=True.  inc_rid is
     sharded over all mesh axes (s-clique partition), state is replicated.
+
+    padded=True is the shape-bucketed variant (``core.session``): fn takes
+    a third replicated ``peeled0`` bool mask marking ghost r-cliques of a
+    padded shape class as pre-peeled (they never bucket, emit no links,
+    keep core/order at -1).  The default 2-arg signature is unchanged —
+    the multi-pod dry-run lowers it as-is.
 
     compress=True: the (n_r,) int32 delta all-reduce is sent as int16 with
     per-shard saturation + ERROR FEEDBACK — the saturated remainder stays in
@@ -90,6 +97,18 @@ def make_sharded_decomposition(mesh: Mesh, n_r: int, n_s_padded: int, C: int,
     on every device, so the emitted forest equals the single-device fused
     forest exactly.
     """
+    n_dev = int(np.prod(mesh.devices.shape))
+    if n_s_padded % n_dev:
+        # pow2 bucketing alone is NOT shard-aware: a mesh whose device
+        # count is not a power of two would slice the s-clique axis
+        # raggedly and shard_map rejects (or worse, silently uneven-pads)
+        # the operand.  Callers pad via pad_incidence or round the bucket
+        # with session.shard_bucket_size.
+        raise ValueError(
+            f"n_s_padded={n_s_padded} is not a multiple of the mesh's "
+            f"{n_dev} devices — the shard_map s-clique slices would be "
+            f"ragged; pad with pad_incidence() or round the shape class "
+            f"with session.shard_bucket_size()")
     axis_names = tuple(mesh.axis_names)
     shard_spec = P(axis_names)      # all axes partition the s-clique dim
     repl_spec = P()
@@ -123,7 +142,7 @@ def make_sharded_decomposition(mesh: Mesh, n_r: int, n_s_padded: int, C: int,
             x = jax.lax.pmax(x, ax)
         return x
 
-    def local_fn(inc_local, deg0):
+    def local_fn(inc_local, deg0, peeled0=None):
         # alive/residual are per-shard state: mark them device-varying so
         # the engine's while_loop carry types match (shard_map VMA tracking)
         n_s_local = inc_local.shape[0]
@@ -137,18 +156,27 @@ def make_sharded_decomposition(mesh: Mesh, n_r: int, n_s_padded: int, C: int,
             core, _order, rounds, parent, L = run_peel_engine(
                 inc_local, deg0, schedule, max_rounds=cap_rounds,
                 reduce_delta=reduce_delta, resid0=resid0, alive0=alive0,
-                hierarchy=True, link0=link0, gather_links=gather_links)
+                hierarchy=True, link0=link0, gather_links=gather_links,
+                peeled0=peeled0)
             return core, rounds, replicate(parent), replicate(L)
         core, _order, rounds = run_peel_engine(
             inc_local, deg0, schedule, max_rounds=cap_rounds,
-            reduce_delta=reduce_delta, resid0=resid0, alive0=alive0)
+            reduce_delta=reduce_delta, resid0=resid0, alive0=alive0,
+            peeled0=peeled0)
         return core, rounds
 
     n_out = 4 if hierarchy else 2
-    fn = _shard_map(local_fn, mesh=mesh,
-                    in_specs=(shard_spec, repl_spec),
+    n_in = 3 if padded else 2
+    if not padded:
+        # keep the historical 2-arg signature: the dry-run lowers it
+        body = lambda inc_local, deg0: local_fn(inc_local, deg0)
+    else:
+        body = local_fn
+    fn = _shard_map(body, mesh=mesh,
+                    in_specs=(shard_spec,) + (repl_spec,) * (n_in - 1),
                     out_specs=(repl_spec,) * n_out)
-    in_sh = (NamedSharding(mesh, shard_spec), NamedSharding(mesh, repl_spec))
+    in_sh = (NamedSharding(mesh, shard_spec),) + \
+        (NamedSharding(mesh, repl_spec),) * (n_in - 1)
     out_sh = (NamedSharding(mesh, repl_spec),) * n_out
     return fn, in_sh, out_sh
 
@@ -157,7 +185,7 @@ def make_sharded_decomposition(mesh: Mesh, n_r: int, n_s_padded: int, C: int,
 def _jitted_decomposition(mesh: Mesh, n_r: int, n_s_padded: int, C: int,
                           schedule: PeelSchedule,
                           max_rounds: Optional[int], compress: bool,
-                          hierarchy: bool):
+                          hierarchy: bool, padded: bool = False):
     """Warm pool for the sharded fn: ``jax.jit`` caches executables per
     *callable object*, and ``make_sharded_decomposition`` used to return a
     fresh closure on every call — so every sharded run recompiled even for
@@ -167,8 +195,30 @@ def _jitted_decomposition(mesh: Mesh, n_r: int, n_s_padded: int, C: int,
     relies on."""
     fn, _, _ = make_sharded_decomposition(mesh, n_r, n_s_padded, C, schedule,
                                           max_rounds, compress=compress,
-                                          hierarchy=hierarchy)
+                                          hierarchy=hierarchy, padded=padded)
     return jax.jit(fn)
+
+
+def sharded_decomposition_padded(inc: jnp.ndarray, deg0: jnp.ndarray,
+                                 peeled0: jnp.ndarray, mesh: Mesh,
+                                 schedule: PeelSchedule, *,
+                                 max_rounds: Optional[int] = None,
+                                 compress: bool = False,
+                                 hierarchy: bool = False):
+    """Run the sharded peel on an already shape-bucketed problem.
+
+    ``core.session``'s sharded warm path: the caller has padded the
+    s-clique axis to a shard-multiple shape class (``shard_bucket_size``)
+    with ghost -1 rows, the r-clique axis to its bucket with ghost
+    pre-peeled entries (``peeled0``), and canonicalized the schedule — so
+    same-bucket problems key the same ``_jitted_decomposition`` entry and
+    reuse one shard_map executable.  Returns the engine outputs unsliced
+    (the caller trims the ghost tail)."""
+    n_s_pad, C = int(inc.shape[0]), int(inc.shape[1])
+    fn = _jitted_decomposition(mesh, int(deg0.shape[0]), n_s_pad, C,
+                               schedule, max_rounds, compress, hierarchy,
+                               padded=True)
+    return fn(inc, deg0, peeled0)
 
 
 def sharded_decomposition(problem: NucleusProblem, mesh: Mesh,

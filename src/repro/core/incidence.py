@@ -8,7 +8,7 @@ L_i tables occupy), it drives every later stage with gathers/segment-sums:
   mem CSR               r-clique id -> incident s-clique ids
   deg0        (n_r,)    initial s-clique-degree of each r-clique
 
-Two builders produce bit-identical output (DESIGN.md §7):
+Three builders produce bit-identical output (DESIGN.md §7, §13):
 
   * ``build="eager"``   — one level-synchronous expansion over all source
     vertices at once, one concatenated sort-join.  Fastest when the
@@ -22,6 +22,12 @@ Two builders produce bit-identical output (DESIGN.md §7):
     Pallas ``tricount_oriented`` boolean-tile kernel (jnp oracle fallback),
     so allocation sizes come off the MXU without materializing a candidate
     array.
+  * ``build="sharded"`` — the distributed build (``repro.distbuild``,
+    DESIGN.md §13): budget-sized chunks are assigned to shards by a work
+    planner, each shard expands its own contiguous seed range, and the
+    incidence arrays are assembled slab-by-slab with a two-pass
+    count-then-fill exchange — no global concatenate, no single-host
+    ``csr_from_pairs``.
 
 Peak intermediate memory is tracked by both builders (``build_stats`` on the
 returned problem) so the ``build`` benchmark lane can report the headroom.
@@ -41,7 +47,7 @@ from ..graph.cliques import expand_levels, lexsort_rows, sort_join_np
 from ..graph.orientation import degree_rank, approx_degeneracy_rank
 from ..graph.container import Digraph, orient
 
-BUILDS = ("eager", "chunked")
+BUILDS = ("eager", "chunked", "sharded")
 # default memory budget for build="chunked" when the caller names neither a
 # budget nor a chunk size: enough for the dense (2,3) fast path at n ~ 4.5k
 DEFAULT_BUILD_BUDGET = 256 << 20
@@ -104,18 +110,35 @@ def build_problem(g: Graph, r: int, s: int,
                   build: str = "eager",
                   memory_budget_bytes: Optional[int] = None,
                   chunk_size: Optional[int] = None,
-                  fastpath: Optional[bool] = None) -> NucleusProblem:
+                  fastpath: Optional[bool] = None,
+                  shards: Optional[int] = None) -> NucleusProblem:
     """Build the (r, s) incidence structure.
 
     build="eager" is the one-burst builder; build="chunked" bounds peak
     intermediate memory by ``memory_budget_bytes`` (or an explicit
-    ``chunk_size`` in source vertices).  Both produce bit-identical arrays.
-    ``fastpath`` forces the dense Pallas (2,3) count pass on/off (None =
-    auto: on when (r, s) == (2, 3) and the dense blocks fit the budget).
+    ``chunk_size`` in source vertices); build="sharded" distributes the
+    chunks over ``shards`` workers (default: ``jax.device_count()``) and
+    assembles per-shard slabs directly (``repro.distbuild``).  All three
+    produce bit-identical arrays.  ``fastpath`` forces the dense Pallas
+    (2,3) count pass on/off (None = auto: on when (r, s) == (2, 3) and
+    the dense blocks fit the budget; chunked builder only).
     """
     assert 1 <= r < s, (r, s)
     if build not in BUILDS:
         raise ValueError(f"build={build!r}; expected one of {BUILDS}")
+    if shards is not None and build != "sharded":
+        raise ValueError(
+            f"shards={shards} is the sharded builder's worker count; set "
+            f"build='sharded' or drop it (got build={build!r})")
+    if build == "sharded":
+        if fastpath:
+            raise ValueError(
+                "fastpath=True is the chunked builder's dense (2,3) count "
+                "pass; it does not apply to build='sharded'")
+        from ..distbuild import build_problem_sharded
+        return build_problem_sharded(
+            g, r, s, rank, n_shards=shards,
+            memory_budget_bytes=memory_budget_bytes, chunk_size=chunk_size)
     dg, orientation = _resolve_digraph(g, rank)
     if build == "eager":
         return _build_eager(g, r, s, dg, orientation)

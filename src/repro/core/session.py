@@ -30,12 +30,15 @@ Pallas configs ride the warm path too: the round-megakernel plan is
 padded to the same pow2 buckets (edge axis bucketed at floor ``chunk_e``,
 chunk-span bound pow2-rounded), so ``use_pallas=True`` — or a profile
 that defaults it on — reuses one executable per shape class instead of
-recompiling per problem.  Configs that resolve to a non-dense backend, or
-whose megakernel plan would exceed its memory budget, fall back to the
-planned cold path (same ``Plan`` provenance, counted in
-``stats["fallback"]``): correct, just not bucket-warmed; the sharded
-backend has its own same-shape warm cache
-(``distributed._jitted_decomposition``).
+recompiling per problem.  Sharded configs ride it as well: the s-clique
+axis is padded to SHARD-MULTIPLE shape classes (``shard_bucket_size`` —
+pow2 alone slices raggedly when the mesh size is not a power of two;
+DESIGN.md §13) with ghost -1 rows, ghost r-cliques enter pre-peeled, and
+same-bucket problems reuse one ``shard_map`` executable through
+``distributed._jitted_decomposition``.  Configs that resolve to any other
+non-dense backend, or whose megakernel plan would exceed its memory
+budget, fall back to the planned cold path (same ``Plan`` provenance,
+counted in ``stats["fallback"]``): correct, just not bucket-warmed.
 ``launch.serve --arch nucleus --warm-pool`` drives this end-to-end.
 """
 from __future__ import annotations
@@ -77,6 +80,22 @@ def bucket_size(n: int, floor: int = DEFAULT_BUCKET_FLOOR) -> int:
     executable."""
     n = max(int(n), int(floor), 1)
     return 1 << (n - 1).bit_length()
+
+
+def shard_bucket_size(n: int, n_shards: int,
+                      floor: int = DEFAULT_BUCKET_FLOOR) -> int:
+    """Shard-aware shape class: the pow2 bucket rounded UP to a multiple
+    of ``n_shards``.
+
+    ``shard_map`` slices the s-clique axis evenly across the mesh, so a
+    sharded bucket must be a shard multiple — pow2 alone is ragged
+    whenever the device count is not a power of two (the PR-5 leftover;
+    ``make_sharded_decomposition`` rejects ragged shapes).  For pow2
+    shard counts <= the bucket this is the identity, so near-miss shapes
+    still collapse onto one shard_map executable."""
+    b = bucket_size(n, floor)
+    n_shards = max(int(n_shards), 1)
+    return -(-b // n_shards) * n_shards
 
 
 def canonical_schedule(method: str, s_choose_r: int, delta: float,
@@ -121,10 +140,15 @@ class _Bucket:
     # XLA round body); the plan arrays are padded to the same pow2 buckets
     # (edge axis included) so warm members reuse the executable
     pallas: Optional[ScatterSpec] = None
+    # mesh device count of a sharded bucket (0 = single-device dense);
+    # its n_s_pad is a shard multiple (``shard_bucket_size``).  NEW FIELDS
+    # GO AFTER THIS ONE: positional consumers (router report, manifest
+    # ``_Bucket(*key)``) index the prefix.
+    shards: int = 0
 
     def astuple(self) -> Tuple:
         return (self.method, self.r, self.s, self.fused, self.n_r_pad,
-                self.n_s_pad, self.schedule, self.pallas)
+                self.n_s_pad, self.schedule, self.pallas, self.shards)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -206,6 +230,8 @@ class Session:
         # a problem just under budget unpadded can land over it padded
         e_pad = bucket_size(problem.n_s * problem.n_sub, DEFAULT_CHUNK_E)
         plan_bytes = 4 * e_pad * problem.n_sub
+        if config.backend == "sharded" and problem.n_r > 0:
+            return self._decompose_padded_sharded(problem, config, plan)
         if config.backend != "dense" or problem.n_r == 0 or (
                 wants_pallas and plan_bytes > MEGAKERNEL_PLAN_BUDGET_BYTES):
             self._count("fallback")
@@ -504,5 +530,67 @@ class Session:
             core, peel_value = core_raw, core_raw
         return Decomposition(config, problem=problem, core=core,
                              rounds=rounds, order_round=order_round,
+                             peel_value=peel_value, uf_parent=uf_parent,
+                             uf_L=uf_L, plan=plan)
+
+    # -- the padded sharded path -------------------------------------------
+    def _decompose_padded_sharded(self, problem: NucleusProblem,
+                                  config: NucleusConfig,
+                                  plan) -> Decomposition:
+        """Shape-bucketed ``shard_map`` peel: same artifact contract as the
+        sharded backend's cold path, but the s-clique axis is padded to a
+        SHARD-MULTIPLE shape class (``shard_bucket_size``) and ghost
+        r-cliques enter pre-peeled, so near-miss shapes share one compiled
+        ``shard_map`` executable (``distributed._jitted_decomposition``
+        keys on the padded shapes + canonical schedule)."""
+        from .distributed import sharded_decomposition_padded
+        mesh = config.mesh
+        if mesh is None:
+            from ..launch.mesh import make_host_mesh
+            mesh = make_host_mesh()
+        n_dev = int(np.prod(mesh.devices.shape))
+        fused = config.hierarchy == "fused"
+        n_r, n_s, C = problem.n_r, problem.n_s, problem.n_sub
+        bucket = _Bucket(
+            method=config.method, r=config.r, s=config.s, fused=fused,
+            n_r_pad=bucket_size(n_r, self.bucket_floor),
+            n_s_pad=shard_bucket_size(n_s, n_dev, self.bucket_floor),
+            schedule=canonical_schedule(config.method, C, config.delta,
+                                        problem.g.n),
+            shards=n_dev)
+        n_r_pad, n_s_pad = bucket.n_r_pad, bucket.n_s_pad
+        assert n_s_pad % n_dev == 0, (n_s_pad, n_dev)
+        key = tuple(bucket.astuple())
+        # kind "sharded" keeps these out of the manifest: prewarm rebuilds
+        # dense executables only (a restarted server re-warms shard_map
+        # buckets on first traffic)
+        warm = self._bucket_hit(key, meta={"kind": "sharded"})
+        self._count("warm" if warm else "cold")
+
+        inc = jnp.concatenate(
+            [problem.inc_rid, jnp.full((n_s_pad - n_s, C), -1, INT)], axis=0)
+        deg0 = jnp.concatenate(
+            [problem.deg0, jnp.zeros((n_r_pad - n_r,), INT)])
+        peeled0 = jnp.concatenate(
+            [jnp.zeros((n_r,), bool), jnp.ones((n_r_pad - n_r,), bool)])
+        out = sharded_decomposition_padded(
+            inc, deg0, peeled0, mesh, bucket.schedule,
+            max_rounds=n_r_pad + 2, compress=config.compress,
+            hierarchy=fused)
+        core_raw = np.asarray(out[0])[:n_r]
+        rounds = int(out[1])
+        uf_parent = uf_L = None
+        if fused:
+            uf_parent = np.asarray(out[2])[:n_r]
+            uf_L = np.asarray(out[3])[:n_r]
+        if config.method == "approx":
+            core = np.minimum(core_raw, np.asarray(problem.deg0))
+            peel_value = core_raw
+        else:
+            core, peel_value = core_raw, core_raw
+        # no order_round: the sharded engine records no trace
+        # (records_trace=False), matching the cold sharded backend
+        return Decomposition(config, problem=problem, core=core,
+                             rounds=rounds, order_round=None,
                              peel_value=peel_value, uf_parent=uf_parent,
                              uf_L=uf_L, plan=plan)

@@ -1,0 +1,37 @@
+"""``repro.distbuild``: sharded clique listing + incidence build.
+
+The chunked builder (DESIGN.md §7) bounds peak memory on ONE host; the
+sharded backend (``core.distributed``) partitions the *peel* — but every
+graph still entered the system through a single-host incidence build.
+This package fuses the two (DESIGN.md §13):
+
+  * ``planner``   — partition the level-1 frontier into budget-sized
+    source-vertex chunks and assign contiguous chunk ranges to shards by
+    an oriented-degree work estimate (prefix sums, O(n) total).
+  * ``builder``   — each shard expands its own chunks (the DAG
+    orientation makes seed ranges independent and duplicate-free, so the
+    expansion is embarrassingly parallel) and its s-clique rows land as a
+    CONTIGUOUS SLAB of the global DAG-expansion-ordered s-table — the
+    exact s-axis layout ``core.distributed`` partitions — with no global
+    concatenate.
+  * ``exchange``  — the only cross-shard structure, the r-clique
+    membership CSR, is built by a two-pass count-then-fill exchange:
+    per-shard degree counts are summed (the all-reduce a multi-host run
+    would issue), then every shard fills its slab's s-ids into disjoint
+    cursor ranges of the global CSR.
+
+Output is BIT-IDENTICAL to the eager and chunked builders for every shard
+count (the digest-parity suite pins 1/2/4/8); ``build_problem(...,
+build="sharded")`` is the front door.
+"""
+from .builder import build_problem_sharded
+from .planner import (ShardPlan, estimate_eager_build_bytes, plan_shards,
+                      seed_work_estimate)
+
+__all__ = [
+    "ShardPlan",
+    "build_problem_sharded",
+    "estimate_eager_build_bytes",
+    "plan_shards",
+    "seed_work_estimate",
+]

@@ -1,0 +1,146 @@
+"""Shard-local expansion + direct slab assembly of the incidence structure.
+
+Execution model: shard k expands ONLY its planned seed range (contiguous
+chunks, each one budget-bounded exactly like the single-host chunked
+builder's), so its s-clique rows are a contiguous slab of the global
+DAG-expansion-ordered s-table.  The slab boundaries are known from the
+per-shard row counts alone, so the global ``inc_rid`` array is allocated
+once and every shard writes its own ``[slab_lo, slab_hi)`` rows — there is
+no global concatenate of vertex-tuple tables and no single-host
+``csr_from_pairs`` pass (the mem-CSR comes from ``exchange``'s two-pass
+count-then-fill).
+
+The only globally shared inputs are the r-clique table (lexsorted unique
+rows — every shard joins its slab against the same table, the broadcast a
+multi-host run would issue) and the per-r-clique degree counts (the
+all-reduce).  Both are charged to ``build_stats["exchange_bytes"]``.
+
+Bit-identity with the eager/chunked builders follows from three facts the
+test suite pins per shard count:
+
+  * contiguous seed ranges expand independently and duplicate-free
+    (``expand_levels``' chunking invariant), so slab-major row order IS the
+    whole-frontier expansion order;
+  * ``sort_join_np`` is a per-row pure function of (table, row) — block and
+    slab boundaries cannot change the ids;
+  * the count-then-fill exchange reproduces ``csr_from_pairs``' stable
+    grouping because slabs are filled in ascending global s-id order.
+
+This file runs the shards sequentially in one process — the point is the
+communication/layout schedule (what each shard reads, writes, and
+exchanges), which is identical whether the loop bodies run here or on
+eight hosts.
+"""
+from __future__ import annotations
+
+from math import comb
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..graph import Graph
+from ..graph.cliques import iter_clique_chunks, sort_join_np, subset_columns
+from .exchange import assemble_mem_csr
+from .planner import estimate_eager_build_bytes, plan_shards
+
+
+def build_problem_sharded(g: Graph, r: int, s: int,
+                          rank: Optional[jnp.ndarray] = None, *,
+                          n_shards: Optional[int] = None,
+                          memory_budget_bytes: Optional[int] = None,
+                          chunk_size: Optional[int] = None):
+    """Sharded twin of ``incidence.build_problem`` (front door for
+    ``build="sharded"``).
+
+    ``n_shards`` defaults to ``jax.device_count()`` — the mesh the peel
+    will run on, so build slabs line up with peel shards.  Output is
+    bit-identical to the eager builder for every shard count.
+    """
+    # late import: incidence lazily dispatches here from build_problem, so
+    # a module-level import back into it would be circular on first touch
+    from ..core.incidence import (DEFAULT_BUILD_BUDGET, NucleusProblem,
+                                  _fill_parts, _resolve_digraph)
+    assert 1 <= r < s, (r, s)
+    if n_shards is None:
+        import jax
+        n_shards = jax.device_count()
+    dg, orientation = _resolve_digraph(g, rank)
+    budget = memory_budget_bytes if memory_budget_bytes is not None \
+        else DEFAULT_BUILD_BUDGET
+    plan = plan_shards(dg, s, n_shards,
+                       memory_budget_bytes=memory_budget_bytes,
+                       chunk_size=chunk_size)
+
+    # --- shard-local expansion: each shard walks only its chunk range ----
+    C = comb(s, r)
+    all_r_parts: List[np.ndarray] = []
+    s_slabs: List[np.ndarray] = []
+    expand_peak = 0
+    for k in range(plan.n_shards):
+        seed0, seed1 = plan.shard_seed_range(k)
+        s_parts: List[np.ndarray] = []
+        for _s0, levels, chunk_peak in iter_clique_chunks(
+                dg, [r, s], plan.chunk_size, start=seed0, stop=seed1):
+            expand_peak = max(expand_peak, int(chunk_peak))
+            all_r_parts.append(np.asarray(levels[r]))
+            s_parts.append(np.asarray(levels[s]))
+        s_slabs.append(_fill_parts(s_parts, s) if s_parts
+                       else np.zeros((0, s), np.int32))
+
+    # --- r-clique table: the broadcast side of the exchange --------------
+    # r rows are globally unique (DAG orientation), so gathering the shard
+    # parts and lexsorting yields the same table as the eager path; every
+    # shard then joins against this one table.
+    r_rows = _fill_parts(all_r_parts, r)
+    if r_rows.shape[0]:
+        order = np.lexsort(tuple(r_rows[:, c] for c in reversed(range(r))))
+        r_table = r_rows[order]
+    else:
+        r_table = r_rows.reshape(0, r)
+    n_r = int(r_table.shape[0])
+
+    # --- slab bounds + per-shard blocked join into the global inc --------
+    slab_bounds = np.concatenate(
+        [[0], np.cumsum([int(sl.shape[0]) for sl in s_slabs],
+                        dtype=np.int64)])
+    n_s = int(slab_bounds[-1])
+    q_block = max(1, int(budget // max(8 * 4 * C * max(r, 1), 1)))
+    inc = np.empty((n_s, C), np.int32)
+    join_bytes = 0
+    for k in range(plan.n_shards):
+        slab, base = s_slabs[k], int(slab_bounds[k])
+        for b0 in range(0, slab.shape[0], q_block):
+            blk = slab[b0:b0 + q_block]
+            qs = np.concatenate([blk[:, list(cols)]
+                                 for cols in subset_columns(s, r)], axis=0)
+            join_bytes = max(join_bytes, 3 * int(qs.nbytes))
+            ids = sort_join_np(r_table, qs)
+            inc[base + b0:base + b0 + blk.shape[0]] = \
+                np.stack(np.split(ids, C), axis=1)
+        s_slabs[k] = None  # release the slab's vertex tuples as we go
+
+    # --- two-pass count-then-fill exchange for the mem-CSR ---------------
+    mem_offsets, mem_sids, deg0, exchange_bytes = assemble_mem_csr(
+        inc, slab_bounds, n_r, q_block)
+    exchange_bytes += max(plan.n_shards - 1, 0) * int(r_table.nbytes)
+
+    stats: Dict[str, Any] = {
+        "build": "sharded",
+        "n_shards": int(plan.n_shards),
+        "chunk_size": int(plan.chunk_size),
+        "n_chunks": int(plan.n_chunks),
+        "chunks_per_shard": [int(c) for c in plan.chunks_per_shard()],
+        "shard_work": [float(w) for w in plan.shard_work()],
+        "skew": float(plan.skew()),
+        "exchange_bytes": int(exchange_bytes),
+        "peak_intermediate_bytes": max(expand_peak, join_bytes),
+        "memory_budget_bytes": memory_budget_bytes,
+        "eager_estimate_bytes": int(estimate_eager_build_bytes(dg, s)),
+        "fastpath": False,
+    }
+    return NucleusProblem(
+        g=g, r=r, s=s, r_cliques=jnp.asarray(r_table),
+        inc_rid=jnp.asarray(inc), mem_offsets=jnp.asarray(mem_offsets),
+        mem_sids=jnp.asarray(mem_sids), deg0=jnp.asarray(deg0),
+        orientation=orientation, build_stats=stats)

@@ -1,0 +1,87 @@
+"""Cross-shard count-then-fill exchange for the membership CSR.
+
+The membership CSR (r-clique id -> incident s-clique ids) is the one
+structure whose rows mix contributions from every shard: an r-clique's
+incident s-cliques can live in any slab.  Rather than shipping s-rows
+around, the exchange moves only (n_r,)-sized count vectors:
+
+  pass 1 (count / all-reduce)
+      each shard bincounts the r-ids in its own ``inc`` slab; the
+      element-wise sum of the per-shard vectors is ``deg0``, and its
+      cumsum is ``mem_offsets`` — every shard can now compute, for every
+      r-clique, where ITS contribution starts:
+
+          base_k[rid] = mem_offsets[rid] + sum_{j<k} counts_j[rid]
+
+  pass 2 (fill, no communication)
+      shard k writes its slab's s-ids into the disjoint cursor ranges
+      ``[base_k, base_k + counts_k)`` using the same stable-argsort
+      cursor fill as the chunked builder — because slabs are ascending
+      global s-id ranges, the concatenation of shard contributions per
+      r-clique is exactly ``csr_from_pairs``' stable grouping, so
+      ``mem_sids`` is bit-identical to the eager builder's.
+
+``exchange_bytes`` charges the count all-reduce (each shard contributes
+one (n_r,) int64 vector); the caller adds the r-table broadcast.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def shard_degree_counts(inc: np.ndarray, slab_bounds: np.ndarray,
+                        n_r: int) -> np.ndarray:
+    """Pass 1: (n_shards, n_r) int64 per-shard r-clique degree counts."""
+    n_shards = len(slab_bounds) - 1
+    counts = np.zeros((n_shards, n_r), np.int64)
+    for k in range(n_shards):
+        lo, hi = int(slab_bounds[k]), int(slab_bounds[k + 1])
+        if hi > lo:
+            counts[k] = np.bincount(inc[lo:hi].reshape(-1), minlength=n_r)
+    return counts
+
+
+def assemble_mem_csr(inc: np.ndarray, slab_bounds: np.ndarray, n_r: int,
+                     q_block: int) -> Tuple[np.ndarray, np.ndarray,
+                                            np.ndarray, int]:
+    """Two-pass exchange: ``(mem_offsets, mem_sids, deg0, exchange_bytes)``.
+
+    ``inc`` is the global (n_s, C) member-id table, ``slab_bounds`` the
+    (n_shards + 1,) global-row boundaries of each shard's slab, ``q_block``
+    the fill block size (rows) bounding pass-2 transients.
+    """
+    n_s, C = int(inc.shape[0]), int(inc.shape[1])
+    n_shards = len(slab_bounds) - 1
+
+    counts = shard_degree_counts(inc, slab_bounds, n_r)
+    deg0 = counts.sum(axis=0).astype(np.int32)  # the all-reduce result
+    mem_offsets = np.concatenate(
+        [np.zeros((1,), np.int32),
+         np.cumsum(deg0, dtype=np.int64).astype(np.int32)])
+
+    mem_sids = np.empty((n_s * C,), np.int32)
+    earlier = np.zeros((n_r,), np.int64)  # sum of counts of shards < k
+    for k in range(n_shards):
+        lo, hi = int(slab_bounds[k]), int(slab_bounds[k + 1])
+        cursor = mem_offsets[:-1].astype(np.int64) + earlier
+        # blocks never cross the slab boundary: the cursor state is
+        # shard-local, so shard k's fill touches only its own ranges
+        for b0 in range(lo, hi, q_block):
+            blk = inc[b0:min(b0 + q_block, hi)]
+            rid = blk.reshape(-1)
+            sid = np.repeat(
+                np.arange(b0, b0 + blk.shape[0], dtype=np.int32), C)
+            ordr = np.argsort(rid, kind="stable")
+            rid_s, sid_s = rid[ordr], sid[ordr]
+            uniq, cnts = np.unique(rid_s, return_counts=True)
+            run_starts = np.cumsum(cnts) - cnts
+            occ = np.arange(rid_s.size, dtype=np.int64) - \
+                np.repeat(run_starts, cnts)
+            mem_sids[cursor[rid_s] + occ] = sid_s
+            cursor[uniq] += cnts
+        earlier += counts[k]
+
+    exchange_bytes = int(counts.nbytes)
+    return mem_offsets, mem_sids, deg0, exchange_bytes

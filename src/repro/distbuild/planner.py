@@ -1,0 +1,152 @@
+"""Chunk -> shard work planner for the sharded incidence build.
+
+Two nested partitions of the level-1 frontier (the seed vertices):
+
+  * **Chunks** bound peak expansion memory per worker — the same
+    budget-derived sizing the single-host chunked builder uses
+    (``incidence._derive_chunk_size``), so one chunk's expansion fits
+    ``memory_budget_bytes`` regardless of which shard runs it.
+  * **Shards** get contiguous *chunk ranges* balanced by a per-seed work
+    estimate.  Contiguity is load-bearing: seed ranges expand to
+    contiguous row ranges of the DAG-expansion-ordered clique tables
+    (``expand_levels``' chunking invariant), so each shard's s-clique
+    output is a contiguous slab of the final s-table and the assembly
+    needs no global sort or concatenate.
+
+The work estimate is the expansion's own cost model: seed v's level-2
+frontier has ``outdeg(v)`` rows and each deeper level multiplies by at
+most ``dmax``, so ``w(v) = outdeg(v) * dmax^(s-2)`` bounds the rows seed
+v materializes.  Per-chunk totals come off ONE prefix sum over ``w``
+(O(n), no expansion), and shard boundaries are placed by searching the
+chunk-work prefix for the equal-work quantiles — which guarantees
+
+    max shard work <= total work / n_shards + max single-chunk work,
+
+the classic contiguous-partition bound (a chunk is never split).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from ..graph.container import Digraph
+
+
+def seed_work_estimate(dg: Digraph, s: int) -> np.ndarray:
+    """(n,) float64 per-seed expansion-work estimate (rows materialized)."""
+    outdeg = np.asarray(dg.outdeg, dtype=np.float64)
+    depth = float(max(dg.dmax, 1)) ** max(s - 2, 0)
+    # +1 keeps zero-out-degree seeds visible: every seed still costs a row
+    # in level 1, and all-zero work would degenerate the quantile search
+    return outdeg * depth + 1.0
+
+
+def estimate_eager_build_bytes(dg: Digraph, s: int) -> int:
+    """Upper estimate of the eager builder's peak intermediate bytes.
+
+    The same per-seed constant ``_derive_chunk_size`` budgets with
+    (~28 B per candidate element at the deepest level), summed over the
+    whole frontier — what the planner compares against
+    ``memory_budget_bytes`` to decide a single host cannot afford the
+    one-burst expansion."""
+    outdeg = np.asarray(dg.outdeg, dtype=np.float64)
+    dmax = max(dg.dmax, 1)
+    rows = outdeg * float(dmax) ** max(s - 2, 0)
+    return int(28.0 * (s + dmax) * float(rows.sum()))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """The planner's decision: chunk boundaries + contiguous shard ranges.
+
+    ``chunk_bounds``  (n_chunks + 1,) seed-vertex boundaries; chunk i is
+                      seeds [chunk_bounds[i], chunk_bounds[i+1]).
+    ``shard_bounds``  (n_shards + 1,) chunk-index boundaries; shard k owns
+                      chunks [shard_bounds[k], shard_bounds[k+1]) — possibly
+                      empty on tiny graphs.
+    ``chunk_work``    (n_chunks,) estimated rows per chunk.
+    """
+
+    n_shards: int
+    chunk_size: int
+    chunk_bounds: Tuple[int, ...]
+    shard_bounds: Tuple[int, ...]
+    chunk_work: Tuple[float, ...]
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.chunk_bounds) - 1
+
+    def shard_seed_range(self, k: int) -> Tuple[int, int]:
+        """Seed-vertex range [start, stop) shard k expands."""
+        c0, c1 = self.shard_bounds[k], self.shard_bounds[k + 1]
+        return self.chunk_bounds[c0], self.chunk_bounds[c1]
+
+    def chunks_per_shard(self) -> Tuple[int, ...]:
+        b = self.shard_bounds
+        return tuple(b[k + 1] - b[k] for k in range(self.n_shards))
+
+    def shard_work(self) -> Tuple[float, ...]:
+        w = np.asarray(self.chunk_work)
+        b = self.shard_bounds
+        return tuple(float(w[b[k]:b[k + 1]].sum())
+                     for k in range(self.n_shards))
+
+    def skew(self) -> float:
+        """max/mean of estimated shard work over non-trivial plans (1.0 is
+        perfect balance; empty plans report 1.0)."""
+        work = self.shard_work()
+        mean = sum(work) / max(len(work), 1)
+        return float(max(work) / mean) if mean > 0 else 1.0
+
+
+def plan_shards(dg: Digraph, s: int, n_shards: int, *,
+                memory_budget_bytes: Optional[int] = None,
+                chunk_size: Optional[int] = None) -> ShardPlan:
+    """Partition the frontier into chunks and assign them to shards.
+
+    ``chunk_size`` pins the chunk width (tests / parity against the
+    chunked builder); otherwise it derives from the budget exactly as the
+    single-host chunked builder's (``incidence._derive_chunk_size``), so
+    a shard never holds more expansion state than one budget's worth.
+    """
+    from ..core.incidence import DEFAULT_BUILD_BUDGET, _derive_chunk_size
+    n_shards = max(int(n_shards), 1)
+    if chunk_size is None:
+        budget = memory_budget_bytes if memory_budget_bytes is not None \
+            else DEFAULT_BUILD_BUDGET
+        chunk_size = _derive_chunk_size(dg, s, budget)
+        # a generous budget can derive a chunk wider than n / n_shards,
+        # which would starve shards; cap so every shard can get a chunk
+        # (an EXPLICIT chunk_size is respected as pinned)
+        if dg.n:
+            chunk_size = min(chunk_size, -(-int(dg.n) // n_shards))
+    chunk_size = max(1, int(chunk_size))
+    n = int(dg.n)
+    chunk_bounds = list(range(0, n, chunk_size)) + [n]
+    if n == 0:
+        chunk_bounds = [0, 0]
+    n_chunks = len(chunk_bounds) - 1
+
+    w = seed_work_estimate(dg, s)
+    cum = np.concatenate([[0.0], np.cumsum(w)]) if n else np.zeros((1,))
+    chunk_work = tuple(
+        float(cum[chunk_bounds[i + 1]] - cum[chunk_bounds[i]])
+        for i in range(n_chunks))
+
+    # equal-work quantiles over the chunk-work prefix: shard k ends at the
+    # first chunk boundary whose cumulative work reaches k/n_shards of the
+    # total — a chunk is never split, so each shard overshoots its quantile
+    # by at most one chunk's work (the balance bound the tests pin)
+    prefix = np.concatenate([[0.0], np.cumsum(np.asarray(chunk_work))])
+    total = float(prefix[-1])
+    targets = total * np.arange(1, n_shards) / n_shards
+    inner = np.clip(np.searchsorted(prefix, targets, side="left"),
+                    0, n_chunks)
+    shard_bounds = (0,) + tuple(int(x) for x in np.sort(inner)) + (n_chunks,)
+    return ShardPlan(n_shards=n_shards, chunk_size=chunk_size,
+                     chunk_bounds=tuple(chunk_bounds),
+                     shard_bounds=shard_bounds,
+                     chunk_work=chunk_work)

@@ -189,7 +189,8 @@ def _expand_levels_np(adj: np.ndarray, outdeg: np.ndarray, seeds: np.ndarray,
     return out, peak
 
 
-def iter_clique_chunks(dg: Digraph, ks, chunk_size: int):
+def iter_clique_chunks(dg: Digraph, ks, chunk_size: int, *,
+                       start: int = 0, stop: Optional[int] = None):
     """Chunked clique listing: expand `chunk_size` source vertices at a time.
 
     Yields ``(start, levels, peak_bytes)`` per contiguous seed range, with
@@ -197,15 +198,21 @@ def iter_clique_chunks(dg: Digraph, ks, chunk_size: int):
     (see ``expand_levels``); concatenating each level over chunks in yield
     order is row-identical to ``list_cliques``.  Peak live memory is one
     chunk's expansion instead of the whole graph's.
+
+    ``start``/``stop`` restrict the walk to the seed range [start, stop) —
+    a shard of the level-1 frontier.  Chunk boundaries are anchored at
+    ``start``, so a distributed build whose shard boundaries fall on chunk
+    boundaries (``repro.distbuild``) yields exactly the chunks the
+    whole-frontier walk would have produced for that range.
     """
     chunk_size = max(1, int(chunk_size))
+    stop = dg.n if stop is None else min(int(stop), dg.n)
     adj = np.asarray(dg.adj)
     outdeg = np.asarray(dg.outdeg)
-    for start in range(0, dg.n, chunk_size):
-        seeds = np.arange(start, min(start + chunk_size, dg.n),
-                          dtype=np.int32)
+    for s0 in range(int(start), stop, chunk_size):
+        seeds = np.arange(s0, min(s0 + chunk_size, stop), dtype=np.int32)
         levels, peak = _expand_levels_np(adj, outdeg, seeds, ks)
-        yield start, levels, peak
+        yield s0, levels, peak
 
 
 def sort_join_np(table: np.ndarray, queries: np.ndarray) -> np.ndarray:

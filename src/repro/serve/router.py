@@ -58,6 +58,9 @@ class Request:
     backend: str = "dense"
     delta: float = 0.1
     use_pallas: Optional[bool] = None
+    build: str = "eager"
+    build_shards: Optional[int] = None
+    memory_budget_bytes: Optional[int] = None
     artifact: str = ""
     update: Optional[GraphDelta] = None
 
@@ -68,7 +71,9 @@ class Request:
     def config(self) -> NucleusConfig:
         return NucleusConfig(r=self.r, s=self.s, method=self.method,
                              hierarchy=self.hierarchy, backend=self.backend,
-                             delta=self.delta, use_pallas=self.use_pallas)
+                             delta=self.delta, use_pallas=self.use_pallas,
+                             build=self.build, build_shards=self.build_shards,
+                             memory_budget_bytes=self.memory_budget_bytes)
 
 
 def canonical_config(config: NucleusConfig) -> NucleusConfig:
@@ -110,6 +115,10 @@ class Router:
         self._lock = threading.Lock()
         self._pools: Dict[Tuple, Session] = {}
         self._last_plan: Dict[Tuple, Any] = {}
+        # pool -> build_stats of the last decomposition whose problem
+        # carried them (how the incidence structure was built: sharded
+        # chunk/skew/exchange telemetry rides the status surface)
+        self._last_build: Dict[Tuple, Dict[str, Any]] = {}
         # name -> (artifact, pool_key); versions live on the artifact
         self._artifacts: Dict[str, Tuple[Decomposition, Tuple]] = {}
 
@@ -177,6 +186,8 @@ class Router:
         with self._lock:
             if dec.plan is not None:
                 self._last_plan[key] = dec.plan
+            if dec.problem is not None and dec.problem.build_stats:
+                self._last_build[key] = dict(dec.problem.build_stats)
             if artifact:
                 dec.name = artifact
                 self._artifacts[artifact] = (dec, key)
@@ -218,20 +229,27 @@ class Router:
         with self._lock:
             pools = list(self._pools.items())
             plans = dict(self._last_plan)
+            builds = dict(self._last_build)
             artifacts = dict(self._artifacts)
+
+        def bucket_row(sess: Session, k: Tuple, v: int) -> Dict[str, Any]:
+            # decompose/sharded buckets carry shape-class meta; everything
+            # else is a stream-stage key (see Session._bucket_hit)
+            kind = sess._bucket_meta.get(k, {}).get("kind")
+            if kind == "decompose":
+                return {"n_r_pad": k[4], "n_s_pad": k[5], "count": int(v)}
+            if kind == "sharded":
+                return {"n_r_pad": k[4], "n_s_pad": k[5],
+                        "shards": int(k[8]), "count": int(v)}
+            return {"stream_stage": str(k[0]), "count": int(v)}
+
         pool_rows = []
         for key, sess in pools:
             with sess._stats_lock:
                 stats = {k: v for k, v in sess.stats.items()
                          if k != "buckets"}
-                # decompose buckets carry manifest meta; everything else
-                # is a stream-stage key (see Session._bucket_hit)
-                buckets = [
-                    {"n_r_pad": k[4], "n_s_pad": k[5], "count": int(v)}
-                    if sess._bucket_meta.get(k, {}).get("kind")
-                    == "decompose"
-                    else {"stream_stage": str(k[0]), "count": int(v)}
-                    for k, v in sess.stats["buckets"].items()]
+                buckets = [bucket_row(sess, k, v)
+                           for k, v in sess.stats["buckets"].items()]
             warm, cold = stats["warm"], stats["cold"]
             plan = plans.get(key)
             pool_rows.append({
@@ -240,6 +258,7 @@ class Router:
                 "stats": stats,
                 "hit_rate": warm / max(warm + cold, 1),
                 "buckets": buckets,
+                "build": builds.get(key),
             })
         artifact_rows = {
             name: {"version": dec.version, "n_r": dec.n_r,

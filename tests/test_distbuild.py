@@ -1,0 +1,293 @@
+"""Sharded (distbuild) incidence builder: bit-identity + planner properties.
+
+The sharded builder (DESIGN.md §13) assembles per-shard CSR slabs with a
+count-then-fill exchange instead of a global concat + ``csr_from_pairs``;
+these tests pin that it is byte-identical to the eager build on every
+``NucleusProblem`` array for every golden graph x (r, s) x shard count,
+that the work-estimate planner's chunk->shard assignment is a balanced
+contiguous partition, and that the Session's sharded warm path rounds its
+shape buckets to shard multiples (the PR-5 leftover: pow2 alone is not
+shard-aware).
+
+Multi-device cases run in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (device count locks
+at first jax init), same idiom as tests/test_distributed_core.py.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.graph import generators
+from repro.core import decompose, NucleusConfig
+from repro.core.incidence import build_problem, pick_rank
+from repro.distbuild import (build_problem_sharded, estimate_eager_build_bytes,
+                             plan_shards, seed_work_estimate)
+
+pytestmark = pytest.mark.fast
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+GRAPHS = {
+    "bowtie_plus": generators.tiny_named("bowtie_plus"),
+    "er20": generators.erdos_renyi(20, 0.35, seed=1),
+    "planted": generators.planted_cliques(40, [8, 6, 5], 0.05, seed=3),
+    "ba60": generators.barabasi_albert(60, 4, seed=4),
+    "empty10": generators.erdos_renyi(10, 0.0, seed=0),
+}
+RS = [(1, 2), (2, 3), (2, 4), (3, 4)]
+ARRAYS = ("r_cliques", "inc_rid", "mem_offsets", "mem_sids", "deg0")
+
+_EAGER = {}
+
+
+def _eager(gname, r, s):
+    key = (gname, r, s)
+    if key not in _EAGER:
+        _EAGER[key] = build_problem(GRAPHS[gname], r, s)
+    return _EAGER[key]
+
+
+def assert_problems_identical(e, c):
+    assert e.orientation == c.orientation
+    for f in ARRAYS:
+        a, b = np.asarray(getattr(e, f)), np.asarray(getattr(c, f))
+        assert a.dtype == b.dtype, (f, a.dtype, b.dtype)
+        assert a.shape == b.shape, (f, a.shape, b.shape)
+        np.testing.assert_array_equal(a, b, err_msg=f)
+
+
+def cells():
+    for gname in GRAPHS:
+        for (r, s) in RS:
+            yield pytest.param(gname, r, s, id=f"{gname}-r{r}s{s}")
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity across shard counts (vs eager AND vs chunked)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4, 8])
+@pytest.mark.parametrize("gname,r,s", cells())
+def test_sharded_matches_eager(gname, r, s, n_shards):
+    e = _eager(gname, r, s)
+    c = build_problem(GRAPHS[gname], r, s, build="sharded", shards=n_shards)
+    assert_problems_identical(e, c)
+    st = c.build_stats
+    assert st["build"] == "sharded" and st["n_shards"] == n_shards
+    assert len(st["chunks_per_shard"]) == n_shards
+    assert sum(st["chunks_per_shard"]) == st["n_chunks"]
+
+
+@pytest.mark.parametrize("gname,r,s",
+                         [("planted", 2, 3), ("ba60", 2, 4)])
+def test_sharded_matches_chunked(gname, r, s):
+    c = build_problem(GRAPHS[gname], r, s, build="chunked", chunk_size=7)
+    sh = build_problem(GRAPHS[gname], r, s, build="sharded", shards=3,
+                       chunk_size=2)
+    assert_problems_identical(c, sh)
+
+
+def test_sharded_small_budget_matches_eager():
+    """A tiny budget forces many small chunks across shards; the output is
+    still bit-identical and the builder's accounted peak is reported."""
+    c = build_problem(GRAPHS["ba60"], 2, 4, build="sharded", shards=4,
+                      memory_budget_bytes=50_000)
+    assert_problems_identical(_eager("ba60", 2, 4), c)
+    st = c.build_stats
+    assert st["n_chunks"] > 4
+    assert st["peak_intermediate_bytes"] > 0
+    assert st["exchange_bytes"] > 0
+
+
+def test_sharded_rejects_fastpath_and_stray_shards():
+    with pytest.raises(ValueError, match="fastpath"):
+        build_problem(GRAPHS["er20"], 2, 3, build="sharded", fastpath=True)
+    with pytest.raises(ValueError, match="shards"):
+        build_problem(GRAPHS["er20"], 2, 3, build="eager", shards=4)
+
+
+# ---------------------------------------------------------------------------
+# Planner: budget-derived chunk->shard assignment properties
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gname", ["er20", "planted", "ba60", "empty10"])
+@pytest.mark.parametrize("n_shards", [1, 2, 3, 4, 8])
+@pytest.mark.parametrize("budget", [10_000, 1_000_000, None])
+def test_plan_shards_partition_properties(gname, n_shards, budget):
+    g = GRAPHS[gname]
+    dg, _ = pick_rank(g)
+    plan = plan_shards(dg, 4, n_shards, memory_budget_bytes=budget)
+    n = int(dg.n)
+    assert plan.n_shards == n_shards
+    # chunk bounds tile [0, n) contiguously
+    cb = np.asarray(plan.chunk_bounds)
+    assert cb[0] == 0 and cb[-1] == n
+    assert (np.diff(cb) > 0).all() or n == 0
+    # shard bounds are a monotone cover of the chunk index range
+    sb = np.asarray(plan.shard_bounds)
+    assert sb[0] == 0 and sb[-1] == plan.n_chunks
+    assert (np.diff(sb) >= 0).all()
+    # seed ranges partition [0, n): disjoint, ordered, exhaustive
+    ranges = [plan.shard_seed_range(k) for k in range(n_shards)]
+    assert ranges[0][0] == 0 and ranges[-1][1] == n
+    for (a0, a1), (b0, b1) in zip(ranges, ranges[1:]):
+        assert a1 == b0 and a0 <= a1 and b0 <= b1
+    # balance bound: the quantile split can overshoot the ideal share by at
+    # most one chunk's work
+    work = np.asarray(plan.chunk_work)
+    if plan.n_chunks and work.sum() > 0:
+        ideal = work.sum() / n_shards
+        assert max(plan.shard_work()) <= ideal + work.max() + 1e-9
+        assert plan.skew() >= 1.0
+
+
+def test_budget_derived_chunks_cannot_collapse_to_one():
+    """The budget-derived chunk size is additionally capped at
+    ceil(n / n_shards), so a generous budget still yields at least one
+    chunk per shard to hand out (an uncapped derivation collapses the
+    whole frontier into a single chunk on a single shard).  Whether every
+    shard actually receives one is up to the work quantiles — a single
+    dominant chunk may still leave trailing shards empty, which the
+    balance bound already covers."""
+    dg, _ = pick_rank(GRAPHS["ba60"])
+    plan = plan_shards(dg, 3, 4, memory_budget_bytes=10**12)
+    assert plan.n_chunks >= 4
+    assert plan.chunk_size <= -(-int(dg.n) // 4)
+
+
+def test_seed_work_estimate_and_eager_estimate():
+    dg, _ = pick_rank(GRAPHS["planted"])
+    w = seed_work_estimate(dg, 4)
+    assert w.shape == (dg.n,) and (w >= 1).all()
+    lo = estimate_eager_build_bytes(dg, 3)
+    hi = estimate_eager_build_bytes(dg, 4)
+    assert 0 < lo < hi  # monotone in s (dmax^(s-2) term)
+
+
+def test_explicit_chunk_size_is_pinned():
+    dg, _ = pick_rank(GRAPHS["ba60"])
+    plan = plan_shards(dg, 4, 2, chunk_size=5)
+    assert plan.chunk_size == 5
+    assert plan.n_chunks == -(-int(dg.n) // 5)
+
+
+# ---------------------------------------------------------------------------
+# Auto-upgrade: backend='auto' + budget exceeded -> non-eager build
+# ---------------------------------------------------------------------------
+
+def test_auto_upgrades_overbudget_build():
+    """With backend='auto' and a budget the eager estimate exceeds, the
+    resolver upgrades the build ('chunked' on one device, 'sharded' on
+    many — the multi-device arm runs in the subprocess test below)."""
+    import jax
+    g = GRAPHS["planted"]
+    dec = decompose(g, NucleusConfig(r=2, s=3, backend="auto",
+                                     memory_budget_bytes=1024))
+    st = dec.problem.build_stats
+    want = "sharded" if len(jax.devices()) > 1 else "chunked"
+    assert st["build"] == want, st
+    ref = decompose(g, NucleusConfig(r=2, s=3))
+    np.testing.assert_array_equal(dec.core, ref.core)
+
+
+# ---------------------------------------------------------------------------
+# Session shape buckets: shard-multiple rounding (the PR-5 leftover)
+# ---------------------------------------------------------------------------
+
+def test_shard_bucket_size_rounds_to_shard_multiple():
+    from repro.core.session import bucket_size, shard_bucket_size
+    assert shard_bucket_size(100, 1) == bucket_size(100)
+    assert shard_bucket_size(100, 8) == 128          # pow2 already divisible
+    assert shard_bucket_size(100, 6) == 132          # 128 -> next mult of 6
+    assert shard_bucket_size(0, 4) % 4 == 0
+    for n in (1, 63, 64, 65, 1000):
+        for k in (1, 2, 3, 5, 8):
+            b = shard_bucket_size(n, k)
+            assert b % k == 0 and b >= n
+
+
+_SUBPROC_SHARDED = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    import jax
+    from repro.graph import generators
+    from repro.core import build_problem, decompose, NucleusConfig
+    from repro.core.distributed import make_sharded_decomposition
+    from repro.core.schedule import PeelSchedule
+    from repro.core.session import Session
+    from repro.launch.mesh import make_host_mesh
+
+    out = {"n_devices": len(jax.devices())}
+
+    # ragged shape classes are rejected, not silently mis-sliced
+    mesh = make_host_mesh()
+    try:
+        make_sharded_decomposition(mesh, 10, 129, 3,
+                                   PeelSchedule(kind="exact", s_choose_r=3,
+                                                delta=0.1, n=10))
+        out["ragged_raises"] = False
+    except ValueError as e:
+        out["ragged_raises"] = "shard_bucket_size" in str(e)
+
+    # sharded warm path: same bucket across two similar graphs -> one
+    # compile, one warm hit; cores match the dense reference exactly
+    cfg = NucleusConfig(r=2, s=3, backend="sharded", hierarchy="fused")
+    sess = Session(cfg)
+    match, buckets = True, set()
+    for seed in (11, 12):
+        g = generators.planted_cliques(40, [8, 6, 5], 0.05, seed=seed)
+        p = build_problem(g, 2, 3)
+        dec = sess.decompose(p)
+        ref = decompose(p, NucleusConfig(r=2, s=3, backend="dense",
+                                         hierarchy="fused"))
+        match &= bool((np.asarray(dec.core) == np.asarray(ref.core)).all())
+        match &= bool((np.asarray(dec.tree.parent)
+                       == np.asarray(ref.tree.parent)).all())
+    with sess._stats_lock:
+        stats = {k: v for k, v in sess.stats.items() if k != "buckets"}
+        for k in sess.stats["buckets"]:
+            buckets.add((int(k[5]), int(k[8])))   # (n_s_pad, shards)
+    out["match"] = match
+    out["stats"] = {k: int(v) for k, v in stats.items()}
+    out["buckets"] = sorted(buckets)
+
+    # over-budget auto-upgrade picks the sharded build on a multi-device
+    # host, and the plan's reasons surface the builder telemetry
+    g = generators.planted_cliques(40, [8, 6, 5], 0.05, seed=11)
+    dec = decompose(g, NucleusConfig(r=2, s=3, backend="auto",
+                                     memory_budget_bytes=1024))
+    st = dec.problem.build_stats
+    out["auto_build"] = st["build"]
+    out["auto_backend"] = dec.plan.backend
+    out["reason_mentions_build"] = any("build 'sharded'" in r
+                                       for r in dec.plan.reasons)
+    print(json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_sharded_session_and_auto_upgrade_8_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run([sys.executable, "-c", _SUBPROC_SHARDED],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    assert res["n_devices"] == 8
+    assert res["ragged_raises"] is True
+    assert res["match"] is True
+    assert res["stats"]["warm"] == 1 and res["stats"]["cold"] == 1
+    assert res["stats"]["fallback"] == 0
+    for n_s_pad, shards in res["buckets"]:
+        assert shards == 8 and n_s_pad % 8 == 0
+    assert res["auto_build"] == "sharded"
+    assert res["auto_backend"] == "sharded"
+    assert res["reason_mentions_build"] is True

@@ -261,8 +261,30 @@ def test_status_report_matches_schema_and_stats():
         pool = status["pools"][0]
         assert pool["stats"]["decompositions"] == 2
         assert pool["hit_rate"] == pytest.approx(0.5)
+        # builder telemetry rides the pool row (eager builds carry it too)
+        assert pool["build"] is not None
+        assert pool["build"]["build"] == "eager"
         assert status["artifacts"]["a"]["version"] == 0
         assert status["queue_depth"] == 0
+    finally:
+        front.stop()
+
+
+def test_status_report_sharded_build_telemetry():
+    """A sharded-build request surfaces the distbuild chunk/skew/exchange
+    stats in its pool row and the schema accepts them."""
+    front = Frontend(Router()).start()
+    try:
+        front.submit_wait(Request(graph=GRAPHS["er20"](), r=2, s=3,
+                                  build="sharded", build_shards=4))
+        status = validate_status(status_report(front))
+        build = status["pools"][0]["build"]
+        assert build["build"] == "sharded"
+        assert build["n_shards"] == 4
+        assert len(build["chunks_per_shard"]) == 4
+        assert build["skew"] >= 1.0
+        assert build["exchange_bytes"] >= 0
+        json.dumps(status)  # the whole report must stay JSON-serializable
     finally:
         front.stop()
 

@@ -273,6 +273,7 @@ def test_plan_budget_gate_counts_padded_bytes():
 def test_bucket_key_matches_plan_built_key():
     """The shape-derived ScatterSpec twin equals the spec of the real
     (array-materializing) plan — same bucket keys as the old path."""
+    from repro.core import session as session_mod
     cfg = NucleusConfig(r=2, s=3, backend="dense", hierarchy="fused",
                         use_pallas=True)
     sess = Session(cfg)
@@ -283,7 +284,9 @@ def test_bucket_key_matches_plan_built_key():
         key = sess.bucket_key(problem)
         n_r_pad = bucket_size(problem.n_r, sess.bucket_floor)
         real_spec = sess._pallas_plan(problem, n_r_pad)[2]
-        assert key[-1] == real_spec, gname
+        # read the field by name: the key tuple grew a trailing `shards`
+        # field for sharded shape classes (DESIGN.md §13)
+        assert session_mod._Bucket(*key).pallas == real_spec, gname
 
 
 def test_bucket_key_builds_no_plan_arrays(monkeypatch):
