@@ -186,6 +186,7 @@ def format_table(rows: list[Dict]) -> str:
 
 def main() -> None:
     import argparse
+    import sys
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="pod16x16")
     ap.add_argument("--tag", default="")
@@ -196,6 +197,16 @@ def main() -> None:
         print(json.dumps(rows, indent=2))
     else:
         print(format_table(rows))
+    # failed dry-run cells must redden the lane, not silently thin the table
+    errors = [r for r in rows if r.get("status") == "error"]
+    if errors:
+        for r in errors:
+            print(f"ERROR artifact {r['arch']}--{r['shape']}--{r['mesh']}: "
+                  f"{str(r.get('error'))[:200]}", file=sys.stderr)
+        print(f"{len(errors)} artifact(s) have status=error; re-run "
+              "repro.launch.dryrun (error artifacts are retried "
+              "automatically).", file=sys.stderr)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

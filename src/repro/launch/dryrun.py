@@ -269,6 +269,14 @@ def _extrapolate_lm_cost(spec: ArchSpec, cell: ShapeCell, mesh: Mesh,
     return cost_x, coll_x
 
 
+def _mesh_context(mesh: Mesh):
+    """Mesh context manager across jax versions: jax.set_mesh exists from
+    0.6 on; in 0.4.x the Mesh object itself is the context manager."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
              opt_overrides: Optional[Dict[str, Any]] = None,
              tag: str = "") -> Dict[str, Any]:
@@ -287,7 +295,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
     t0 = time.time()
     # mesh context: required for PartitionSpec-based sharding constraints
     # inside the models (jax.lax.with_sharding_constraint)
-    with jax.set_mesh(mesh):
+    with _mesh_context(mesh):
         lowered = lower_cell(spec, cell, mesh, opt_overrides)
     t1 = time.time()
     compiled = lowered.compile()
@@ -299,7 +307,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
     cost_x = coll_x = None
     if spec.family == "lm":
         try:
-            with jax.set_mesh(mesh):
+            with _mesh_context(mesh):
                 cost_x, coll_x = _extrapolate_lm_cost(spec, cell, mesh,
                                                       opt_overrides)
         except Exception as e:
@@ -366,8 +374,17 @@ def main() -> None:
             for mp in meshes[args.mesh]:
                 path = artifact_path(aid, sname, mp, args.tag)
                 if os.path.exists(path) and not args.force:
-                    print(f"SKIP (cached) {path}")
-                    continue
+                    # error artifacts are retried, not treated as cached:
+                    # an unreadable/failed record must never mask a cell.
+                    try:
+                        with open(path) as f:
+                            prev_status = json.load(f).get("status")
+                    except (OSError, ValueError):
+                        prev_status = None
+                    if prev_status in ("ok", "skipped"):
+                        print(f"SKIP (cached) {path}")
+                        continue
+                    print(f"RERUN (cached status={prev_status}) {path}")
                 print(f"== {aid} x {sname} x "
                       f"{'multi' if mp else 'single'} ==", flush=True)
                 try:
